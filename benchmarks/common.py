@@ -1,0 +1,27 @@
+"""Benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kwargs) -> float:
+    """Median wall-time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args, **kwargs)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kwargs)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

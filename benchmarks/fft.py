@@ -1,0 +1,26 @@
+"""The paper's "FT" stage: frequency-domain convolution timing (paper §5 —
+the vendor-FFT-wrapper problem, solved here by XLA's portable FFT)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.config import LArTPCConfig
+from repro.core.fft_conv import fft_convolve
+from repro.core.noise import simulate_noise
+from repro.core.response import make_response
+
+
+def main():
+    for w, t in [(256, 1024), (512, 2048), (1024, 4096)]:
+        cfg = LArTPCConfig(num_wires=w, num_ticks=t)
+        resp = make_response(cfg)
+        grid = simulate_noise(jax.random.key(0), cfg)  # any dense grid
+        f = jax.jit(lambda g: fft_convolve(g, resp))
+        dt = time_fn(f, grid, iters=3)
+        emit(f"ft/fft_conv_{w}x{t}", dt,
+             f"pix_per_s={w*t/dt:.3g}")
+
+
+if __name__ == "__main__":
+    main()

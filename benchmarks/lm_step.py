@@ -1,0 +1,34 @@
+"""LM substrate micro-benchmarks: smoke-scale train/decode step timing for
+every assigned architecture (CPU; the TPU numbers come from the dry-run
+roofline, not wall time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.config import OptimizerConfig, ShapeConfig, get_config
+from repro.configs import ARCH_IDS
+from repro.data.tokens import make_batch, shard_batch
+from repro.models.model import Model
+from repro.optim.adamw import init_opt_state
+from repro.train.train_step import make_train_step
+
+SHAPE = ShapeConfig("bench", "train", seq_len=64, global_batch=2)
+
+
+def main():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        opt = init_opt_state(params)
+        step = jax.jit(make_train_step(model, OptimizerConfig()))
+        batch = shard_batch(make_batch(cfg, SHAPE, 0, 0))
+        t = time_fn(step, params, opt, batch, warmup=1, iters=3)
+        tokens = SHAPE.global_batch * SHAPE.seq_len
+        emit(f"lm/train_step_{arch}", t, f"tok_per_s={tokens/t:.3g}")
+
+
+if __name__ == "__main__":
+    main()

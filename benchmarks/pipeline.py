@@ -1,0 +1,43 @@
+"""Fig. 3 vs Fig. 4 end-to-end pipeline comparison (the paper's headline).
+
+fig3: per-depo dispatch + host accumulation + device FFT at the end.
+fig4: one jit'd program for the whole event.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.config import LArTPCConfig
+from repro.core.depo import generate_depos
+from repro.core.pipeline import simulate_fig3, simulate_fig4
+from repro.core.response import make_response
+
+
+def main():
+    cfg = LArTPCConfig(num_wires=512, num_ticks=2048, num_depos=1000)
+    depos = generate_depos(jax.random.key(0), cfg)
+    resp = make_response(cfg)
+    key = jax.random.key(1)
+
+    t3 = time_fn(lambda: simulate_fig3(key, depos, resp, cfg).adc,
+                 warmup=1, iters=1)
+    emit("pipeline/fig3_per_depo", t3, f"n={cfg.num_depos}")
+
+    fig4 = jax.jit(lambda k, d: simulate_fig4(k, d, resp, cfg).adc)
+    t4 = time_fn(fig4, key, depos, iters=3)
+    emit("pipeline/fig4_batched", t4,
+         f"n={cfg.num_depos};speedup={t3/t4:.0f}x")
+
+    # scatter strategy end-to-end effect
+    for strat in ["xla", "sort_segment"]:
+        c = dataclasses.replace(cfg, scatter_strategy=strat)
+        f = jax.jit(lambda k, d: simulate_fig4(k, d, resp, c).adc)
+        t = time_fn(f, key, depos, iters=3)
+        emit(f"pipeline/fig4_scatter_{strat}", t, "")
+
+
+if __name__ == "__main__":
+    main()

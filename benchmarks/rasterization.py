@@ -1,0 +1,125 @@
+"""Paper Table 2 analogue: rasterization timing across strategies.
+
+Columns of the paper's table map onto:
+  ref-CPU        -> fig3 host loop with per-depo RNG *inside* the loop
+                    (stateful bottleneck, here emulated with per-depo
+                    counter RNG generated eagerly per dispatch)
+  ref-CUDA       -> fig3 host loop with a pre-computed RNG pool (the paper's
+                    factored-out RNG) — still per-depo dispatch
+  ref-CPU-noRNG  -> fig3 host loop, no fluctuation
+  fig4 (ours)    -> batched device-resident rasterization (one dispatch),
+                    counter RNG fused — the paper's proposed fix (Fig. 4)
+
+Timings on this host's CPU; the *ratios* reproduce the paper's findings
+(F1: per-item dispatch dominates; F2: factoring RNG out is the big win).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.config import LArTPCConfig
+from repro.core import fluctuate as fl
+from repro.core.depo import depo_patch_origin, generate_depos
+from repro.core.rasterize import rasterize, rasterize_one
+from repro.kernels.rasterize.ops import rasterize_depos
+
+N_DEPOS = 2000  # scaled from the paper's 100k to CPU-benchmark scale
+
+
+def _fig3_loop(depos, cfg, rng_mode: str):
+    pw, pt = cfg.patch_wires, cfg.patch_ticks
+
+    @jax.jit
+    def one(wire, tick, sw, st, q, w0, t0, key):
+        patch = rasterize_one(wire, tick, sw, st, q, w0, t0, pw, pt)
+        if rng_mode == "in_loop":
+            normals = jax.random.normal(key, (pw, pt))
+            qq = jnp.maximum(q, 1.0)
+            p = jnp.clip(patch / qq, 0, 1)
+            patch = jnp.maximum(
+                patch + jnp.sqrt(jnp.maximum(patch * (1 - p), 0)) * normals, 0)
+        elif rng_mode == "pool":
+            normals = _POOL[: pw * pt].reshape(pw, pt)
+            qq = jnp.maximum(q, 1.0)
+            p = jnp.clip(patch / qq, 0, 1)
+            patch = jnp.maximum(
+                patch + jnp.sqrt(jnp.maximum(patch * (1 - p), 0)) * normals, 0)
+        return patch
+
+    w0s, t0s = depo_patch_origin(depos, cfg)
+    w = np.asarray(depos.wire)
+    t = np.asarray(depos.tick)
+    sw = np.asarray(depos.sigma_w)
+    st = np.asarray(depos.sigma_t)
+    q = np.asarray(depos.charge)
+    w0 = np.asarray(w0s, np.float32)
+    t0 = np.asarray(t0s, np.float32)
+    key = jax.random.key(0)
+
+    def run():
+        acc = 0.0
+        for i in range(depos.n):
+            patch = np.asarray(one(w[i], t[i], sw[i], st[i], q[i],
+                                   w0[i], t0[i], jax.random.fold_in(key, i)))
+            acc += patch[0, 0]
+        return acc
+
+    return run
+
+
+_POOL = None
+
+
+def main():
+    global _POOL
+    cfg = LArTPCConfig(num_wires=512, num_ticks=2048, num_depos=N_DEPOS)
+    depos = generate_depos(jax.random.key(0), cfg)
+    _POOL = fl.make_pool(jax.random.key(1), 1 << 16)
+
+    # fig3 variants (per-depo dispatch, like the paper's Fig. 3 ports)
+    t_inloop = time_fn(_fig3_loop(depos, cfg, "in_loop"), warmup=1, iters=1)
+    emit("table2/fig3_rng_in_loop(ref-CPU)", t_inloop,
+         f"n={N_DEPOS};per_depo_us={t_inloop/N_DEPOS*1e6:.1f}")
+    t_pool = time_fn(_fig3_loop(depos, cfg, "pool"), warmup=1, iters=1)
+    emit("table2/fig3_rng_pool(ref-CUDA)", t_pool,
+         f"per_depo_us={t_pool/N_DEPOS*1e6:.1f}")
+    t_norng = time_fn(_fig3_loop(depos, cfg, "none"), warmup=1, iters=1)
+    emit("table2/fig3_no_rng(ref-CPU-noRNG)", t_norng,
+         f"per_depo_us={t_norng/N_DEPOS*1e6:.1f}")
+
+    # fig4: one batched dispatch (the paper's fix)
+    @jax.jit
+    def fig4(key, depos):
+        patches, w0, t0 = rasterize(depos, cfg)
+        return fl.fluctuate_counter(key, patches, depos.charge)
+
+    t_fig4 = time_fn(fig4, jax.random.key(0), depos, iters=5)
+    emit("table2/fig4_batched_fused_rng", t_fig4,
+         f"per_depo_us={t_fig4/N_DEPOS*1e6:.3f};"
+         f"speedup_vs_fig3={t_inloop/t_fig4:.0f}x")
+
+    # fig4 without fluctuation (pure 2D sampling, paper col 3)
+    @jax.jit
+    def fig4_norng(depos):
+        return rasterize(depos, cfg)[0]
+
+    t4n = time_fn(fig4_norng, depos, iters=5)
+    emit("table2/fig4_batched_no_rng", t4n,
+         f"per_depo_us={t4n/N_DEPOS*1e6:.3f}")
+
+    # Pallas kernel path (portability-layer comparison, interpret mode)
+    t_pl = time_fn(
+        lambda: rasterize_depos(jax.random.key(0), depos, cfg,
+                                fluctuate=True),
+        iters=2)
+    emit("table3/fig4_pallas_interpret", t_pl,
+         "interpret-mode-on-CPU;portability-tax-see-notes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run JSON cache and derives, per cell:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+  memory     = HLO_bytes_per_device / HBM_bw                [s]
+  collective = collective_bytes_per_device / link_bw        [s]
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·B (decode, per token) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs. ``cost_analysis()`` of the
+SPMD-partitioned module reports per-device numbers (verified against 6ND).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "results", "roofline.csv")
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per device for the cell."""
+    from repro.config import SHAPES, get_config
+
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyse_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = rec["n_devices"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf_global = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf_global / n_dev
+    useful_ratio = mf_dev / rec["flops"] if rec["flops"] > 0 else 0.0
+    ideal = mf_dev / PEAK_FLOPS
+    bound = max(terms.values())
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf_dev,
+        "hlo_flops_dev": rec["flops"],
+        "useful_ratio": useful_ratio,
+        "roofline_frac": ideal / bound if bound > 0 else 0.0,
+        "temp_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def load_all(mesh: str = "pod1") -> List[Dict]:
+    rows = []
+    if not os.path.isdir(RESULTS_DIR):
+        return rows
+    for fn in sorted(os.listdir(RESULTS_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, fn)) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        row = analyse_cell(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "skipped":
+            rows.append({"cell": rec["cell"], "arch": rec["arch"],
+                         "shape": rec["shape"], "mesh": rec["mesh"],
+                         "skipped": rec.get("reason", "")})
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = ("| cell | compute [ms] | memory [ms] | collective [ms] | "
+           "dominant | useful ratio | roofline frac | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['cell']} | — | — | — | skipped "
+                         f"(sub-quadratic req.) | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['temp_gib']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    all_md = []
+    for mesh in ["pod1", "pod2"]:
+        rows = load_all(mesh)
+        if not rows:
+            continue
+        all_md.append(f"### Mesh {mesh} "
+                      f"({'256 chips' if mesh == 'pod1' else '512 chips'})\n")
+        all_md.append(render(rows))
+    md = "\n".join(all_md)
+    with open(OUT_MD, "w") as f:
+        f.write(md)
+    with open(OUT_CSV, "w") as f:
+        f.write("cell,compute_s,memory_s,collective_s,dominant,"
+                "useful_ratio,roofline_frac,temp_gib\n")
+        for mesh in ["pod1", "pod2"]:
+            for r in load_all(mesh):
+                if "skipped" in r:
+                    f.write(f"{r['cell']},,,,skipped,,,\n")
+                else:
+                    f.write(f"{r['cell']},{r['compute_s']},{r['memory_s']},"
+                            f"{r['collective_s']},{r['dominant']},"
+                            f"{r['useful_ratio']},{r['roofline_frac']},"
+                            f"{r['temp_gib']}\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

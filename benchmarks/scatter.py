@@ -1,0 +1,51 @@
+"""Paper Fig. 5 analogue: scatter-add strategy scaling.
+
+The paper scales Kokkos::atomic_add over OpenMP threads; the TPU-native
+equivalents scale over problem size with three strategies (atomic-free):
+  xla          : one scatter-add HLO
+  sort_segment : radix sort + run collapse + sorted scatter
+  pallas       : owner-computes tile binning (interpret mode on CPU)
+Throughput is reported as depos/second.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.config import LArTPCConfig
+from repro.core.depo import generate_depos
+from repro.core.rasterize import rasterize
+from repro.core.scatter import scatter_sort_segment, scatter_xla
+from repro.kernels.scatter_add.ops import scatter_add_tiles
+
+
+def main():
+    cfg = LArTPCConfig(num_wires=512, num_ticks=2048)
+    for n in [512, 2048, 8192]:
+        depos = generate_depos(jax.random.key(0), cfg, n)
+        patches, w0, t0 = jax.jit(
+            lambda d: rasterize(d, cfg))(depos)
+        jax.block_until_ready(patches)
+
+        f_xla = jax.jit(functools.partial(scatter_xla, cfg=cfg))
+        t = time_fn(f_xla, patches, w0, t0, iters=3)
+        emit(f"fig5/xla_scatter_n{n}", t, f"depos_per_s={n/t:.3g}")
+
+        f_ss = jax.jit(functools.partial(scatter_sort_segment, cfg=cfg))
+        t = time_fn(f_ss, patches, w0, t0, iters=3)
+        emit(f"fig5/sort_segment_n{n}", t, f"depos_per_s={n/t:.3g}")
+
+        if n <= 2048:  # interpret mode is slow; keep bounded
+            import jax.numpy as jnp
+            pad = jnp.pad(patches, ((0, 0), (0, 4), (0, 108)))
+            t = time_fn(lambda: scatter_add_tiles(
+                pad, w0, t0, num_wires=cfg.num_wires,
+                num_ticks=cfg.num_ticks), iters=1)
+            emit(f"fig5/pallas_interpret_n{n}", t, f"depos_per_s={n/t:.3g}")
+
+
+if __name__ == "__main__":
+    main()

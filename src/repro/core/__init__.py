@@ -1,0 +1,18 @@
+"""Core: the paper's contribution — LArTPC signal simulation, TPU-native.
+
+Pipeline (paper Eq. 1/2):
+    depos --rasterize--> patches --scatter-add--> S(t,x) --FFT conv--> M(t,x)
+    (+ shaped electronics noise, digitization)
+"""
+from repro.core.depo import DepoSet, generate_depos
+from repro.core.response import DetectorResponse, make_response
+from repro.core.pipeline import simulate, make_sim_fn
+
+__all__ = [
+    "DepoSet",
+    "generate_depos",
+    "DetectorResponse",
+    "make_response",
+    "simulate",
+    "make_sim_fn",
+]

@@ -1,0 +1,32 @@
+"""Frequency-domain convolution — the paper's "FT" step (Eq. 2).
+
+    S(t,x) --rfft2--> S(ω) ; M(ω) = R(ω)·S(ω) ; M(ω) --irfft2--> M(t,x)
+
+Zero-padding to the response's linear-convolution size avoids circular wrap
+(``make_response`` picks FFT-friendly padded sizes). On TPU the whole chain
+(pad → rfft2 → complex multiply → irfft2 → crop) fuses into one program —
+the paper's §5 "hand-write vendor FFT wrappers" problem is XLA's job here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LArTPCConfig
+from repro.core.response import DetectorResponse
+
+
+def fft_convolve(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
+    """Linear 2-D convolution of the charge grid with the detector response."""
+    w, t = grid.shape
+    wp, tp = resp.pad_shape
+    padded = jnp.zeros((wp, tp), grid.dtype).at[:w, :t].set(grid)
+    freq = jnp.fft.rfft2(padded)
+    out = jnp.fft.irfft2(freq * resp.freq, s=(wp, tp))
+    return out[:w, :t]
+
+
+def digitize(signal: jax.Array, cfg: LArTPCConfig) -> jax.Array:
+    """Voltage -> ADC counts (12-bit), paper's M(t,x) measurement."""
+    adc = cfg.adc_baseline + cfg.adc_per_electron * signal
+    return jnp.clip(jnp.round(adc), 0, 4095).astype(jnp.int16)

@@ -1,0 +1,67 @@
+"""Charge fluctuation — the paper's "Fluctuation" step (Table 2, col 4).
+
+Physics: the patch value p_ij = q·w_ij is a *mean* electron count; the observed
+count is Binomial(n=q, p=w_ij). Wire-Cell's serial CPU code draws
+``std::binomial_distribution`` per pixel — the paper shows this dominates
+runtime (3.42 s of 3.57 s) and serializes the loop. The ports factor the RNG
+out into a pre-computed pool (Box–Muller from uniforms).
+
+TPU adaptation: JAX RNG is counter-based (stateless, splittable), so the
+paper's bottleneck *does not exist* — each pixel can derive its own stream in
+parallel. We implement three strategies to reproduce the paper's comparison:
+
+  counter : normal approximation N(p, sqrt(p(1−q/Q)·…)) with threefry counter
+            RNG — the TPU-native way (paper's problem dissolved).
+  pool    : paper-faithful pre-computed pool of standard normals (generated
+            once, indexed by pixel id modulo pool size) — reproduces the
+            ref-CUDA / Kokkos design.
+  none    : no fluctuation (paper's ref-CPU-noRNG row).
+
+The normal approximation to Binomial(n, p): mean np, var np(1−p). Here np is
+the patch value and p = w_ij, so var = patch·(1−patch/q).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binomial_normal_approx(patches: jax.Array, charge: jax.Array, normals: jax.Array):
+    """Apply binomial fluctuation via normal approximation.
+
+    patches: (N, pw, pt) mean counts; charge: (N,) totals; normals: std normals
+    with patches' shape.
+    """
+    q = jnp.maximum(charge[:, None, None], 1.0)
+    p = jnp.clip(patches / q, 0.0, 1.0)
+    var = jnp.maximum(patches * (1.0 - p), 0.0)
+    out = patches + jnp.sqrt(var) * normals
+    return jnp.maximum(out, 0.0)
+
+
+def fluctuate_counter(key: jax.Array, patches: jax.Array, charge: jax.Array):
+    normals = jax.random.normal(key, patches.shape, patches.dtype)
+    return binomial_normal_approx(patches, charge, normals)
+
+
+def make_pool(key: jax.Array, pool_size: int = 1 << 20) -> jax.Array:
+    """Pre-computed standard-normal pool (paper's ref-CUDA/Kokkos strategy)."""
+    return jax.random.normal(key, (pool_size,), jnp.float32)
+
+
+def fluctuate_pool(pool: jax.Array, patches: jax.Array, charge: jax.Array,
+                   offset: int = 0):
+    """Index the pool by flat pixel id (mod pool size) — no RNG in the loop."""
+    n = patches.size
+    idx = (jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(offset)) % pool.shape[0]
+    normals = pool[idx].reshape(patches.shape)
+    return binomial_normal_approx(patches, charge, normals)
+
+
+def box_muller(u1: jax.Array, u2: jax.Array):
+    """Box–Muller transform (paper §4.3.1) — two uniforms -> one std normal.
+
+    Used inside the Pallas rasterize kernel where we hand it a uniform pool.
+    """
+    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, 1e-12)))
+    return r * jnp.cos(2.0 * jnp.pi * u2)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: FUSED rasterize + scatter-add (beyond-paper Fig. 4++).
+
+The paper's Fig. 4 keeps data on-device between stages; this kernel goes one
+step further: the (N, 24, 128) patch array never exists in HBM at all. Each
+output tile evaluates its depos' bin-integrated Gaussians directly at tile
+coordinates and accumulates in VMEM — at MicroBooNE scale (100k depos) this
+removes ~1.2 GB of HBM write+read traffic, trading it for ~2x more VPU
+transcendentals (erf over tile extents instead of patch extents): a good
+trade at 819 GB/s vs ~100+ Gexp/s.
+
+Grid/binning layout matches ``kernels/scatter_add`` (owner-computes tiles,
+scalar-prefetched per-tile depo lists).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SQRT2 = 1.4142135623730951
+
+
+def _fused_kernel(ids_ref, wire_ref, tick_ref, sw_ref, st_ref, q_ref,
+                  w0_ref, t0_ref, out_ref, *, k_max: int, tw: int, tt: int,
+                  pw: int, pt: int, tiles_t: int):
+    """Grid step (i, k): rasterize depo ids[i*K+k] straight into tile i."""
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d = ids_ref[i * k_max + k]
+
+    @pl.when(d >= 0)
+    def _accum():
+        dd = jnp.maximum(d, 0)
+        wire = wire_ref[dd]
+        tick = tick_ref[dd]
+        sw = sw_ref[dd]
+        st = st_ref[dd]
+        q = q_ref[dd]
+        w0 = w0_ref[dd].astype(jnp.float32)   # patch origin (absolute)
+        t0 = t0_ref[dd].astype(jnp.float32)
+        tile_w0 = ((i // tiles_t) * tw).astype(jnp.float32)
+        tile_t0 = ((i % tiles_t) * tt).astype(jnp.float32)
+
+        # absolute wire/tick coordinates of this tile's rows/cols
+        aw = tile_w0 + jax.lax.broadcasted_iota(jnp.float32, (tw, 1), 0)
+        at = tile_t0 + jax.lax.broadcasted_iota(jnp.float32, (1, tt), 1)
+
+        lo_w = jax.lax.erf((aw - wire) / (sw * _SQRT2))
+        hi_w = jax.lax.erf((aw + 1.0 - wire) / (sw * _SQRT2))
+        ww = jnp.maximum(0.5 * (hi_w - lo_w), 0.0)        # (TW, 1)
+        in_w = (aw >= w0) & (aw < w0 + pw)                # patch support
+        ww = jnp.where(in_w, ww, 0.0)
+
+        lo_t = jax.lax.erf((at - tick) / (st * _SQRT2))
+        hi_t = jax.lax.erf((at + 1.0 - tick) / (st * _SQRT2))
+        wt = jnp.maximum(0.5 * (hi_t - lo_t), 0.0)        # (1, TT)
+        in_t = (at >= t0) & (at < t0 + pt)
+        wt = jnp.where(in_t, wt, 0.0)
+
+        out_ref[...] += q * ww * wt
+
+
+def fused_rasterize_scatter(wire, tick, sigma_w, sigma_t, charge, w0, t0,
+                            tile_ids, *, num_wires: int, num_ticks: int,
+                            tw: int, tt: int, k_max: int, pw: int, pt: int,
+                            interpret: bool = True):
+    """Depos -> charge grid in ONE kernel (no patch array in HBM).
+
+    Scalar-prefetch operands: tile_ids (n_tiles*k_max,) int32 (-1 padded),
+    depo params (N,) f32 / int32.
+    """
+    tiles_w = (num_wires + tw - 1) // tw
+    tiles_t = (num_ticks + tt - 1) // tt
+    n_tiles = tiles_w * tiles_t
+
+    kernel = functools.partial(_fused_kernel, k_max=k_max, tw=tw, tt=tt,
+                               pw=pw, pt=pt, tiles_t=tiles_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(n_tiles, k_max),
+        in_specs=[],
+        out_specs=pl.BlockSpec(
+            (tw, tt), lambda i, k, *refs: (i // tiles_t, i % tiles_t)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((tiles_w * tw, tiles_t * tt),
+                                       jnp.float32),
+        interpret=interpret,
+    )(tile_ids, wire.astype(jnp.float32), tick.astype(jnp.float32),
+      sigma_w.astype(jnp.float32), sigma_t.astype(jnp.float32),
+      charge.astype(jnp.float32), w0.astype(jnp.int32), t0.astype(jnp.int32))
+    return out[:num_wires, :num_ticks]

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the fused rasterize+scatter kernel: DepoSet -> grid."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet, depo_patch_origin
+from repro.kernels.fused_sim.kernel import fused_rasterize_scatter
+from repro.kernels.scatter_add.ops import bin_depos_to_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tw", "tt", "k_max",
+                                             "interpret"))
+def simulate_charge_grid(depos: DepoSet, cfg: LArTPCConfig, tw: int = 64,
+                         tt: int = 256, k_max: int = 0,
+                         interpret: bool = True):
+    """Fused depos -> S(t, x) charge grid (no fluctuation; see kernel doc)."""
+    w0, t0 = depo_patch_origin(depos, cfg)
+    n = depos.n
+    if k_max == 0:
+        tiles = (((cfg.num_wires + tw - 1) // tw)
+                 * ((cfg.num_ticks + tt - 1) // tt))
+        k_max = max(8, int(4 * n / tiles * 8))
+    # bin by the TRUE patch extent (the kernel masks to [w0, w0+pw))
+    ids, _ = bin_depos_to_tiles(w0, t0, cfg.patch_wires, cfg.patch_ticks,
+                                cfg.num_wires, cfg.num_ticks, tw, tt, k_max)
+    return fused_rasterize_scatter(
+        depos.wire, depos.tick, depos.sigma_w, depos.sigma_t, depos.charge,
+        w0, t0, ids, num_wires=cfg.num_wires, num_ticks=cfg.num_ticks,
+        tw=tw, tt=tt, k_max=k_max, pw=cfg.patch_wires, pt=cfg.patch_ticks,
+        interpret=interpret)

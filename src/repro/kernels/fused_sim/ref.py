@@ -1,0 +1,12 @@
+"""Oracle for the fused kernel: unfused rasterize + dense scatter-add."""
+from __future__ import annotations
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet
+from repro.core.rasterize import rasterize
+from repro.core.scatter import scatter_xla
+
+
+def simulate_charge_grid_ref(depos: DepoSet, cfg: LArTPCConfig):
+    patches, w0, t0 = rasterize(depos, cfg)
+    return scatter_xla(patches, w0, t0, cfg)

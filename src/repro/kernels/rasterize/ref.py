@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the rasterize Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SQRT2 = 1.4142135623730951
+
+
+def rasterize_ref(wire, tick, sigma_w, sigma_t, charge, w0, t0, u1, u2, *,
+                  pw: int, pt: int, pw_pad: int = 0, pt_pad: int = 128,
+                  fluctuate: bool = True):
+    """Reference implementation, bit-matching the kernel's math.
+
+    Shapes mirror ``rasterize_pallas``; returns (N, PW_pad, PT_pad) f32.
+    """
+    n = wire.shape[0]
+    pw_pad = pw_pad or ((pw + 7) // 8 * 8)
+    w0f = w0.astype(jnp.float32)[:, None]
+    t0f = t0.astype(jnp.float32)[:, None]
+
+    iw = jnp.arange(pw_pad, dtype=jnp.float32)[None, :]
+    lo_w = jax.lax.erf((w0f + iw - wire[:, None]) / (sigma_w[:, None] * _SQRT2))
+    hi_w = jax.lax.erf((w0f + iw + 1.0 - wire[:, None]) / (sigma_w[:, None] * _SQRT2))
+    ww = jnp.where(iw < pw, jnp.maximum(0.5 * (hi_w - lo_w), 0.0), 0.0)
+
+    it = jnp.arange(pt_pad, dtype=jnp.float32)[None, :]
+    lo_t = jax.lax.erf((t0f + it - tick[:, None]) / (sigma_t[:, None] * _SQRT2))
+    hi_t = jax.lax.erf((t0f + it + 1.0 - tick[:, None]) / (sigma_t[:, None] * _SQRT2))
+    wt = jnp.where(it < pt, jnp.maximum(0.5 * (hi_t - lo_t), 0.0), 0.0)
+
+    q = charge[:, None, None]
+    patch = q * ww[:, :, None] * wt[:, None, :]
+
+    if fluctuate:
+        u1c = jnp.maximum(u1, 1e-12)
+        normal = jnp.sqrt(-2.0 * jnp.log(u1c)) * jnp.cos(2.0 * jnp.pi * u2)
+        p = jnp.clip(patch / jnp.maximum(q, 1.0), 0.0, 1.0)
+        var = jnp.maximum(patch * (1.0 - p), 0.0)
+        patch = jnp.maximum(patch + jnp.sqrt(var) * normal, 0.0)
+    return patch

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the owner-computes scatter-add kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_add_ref(patches, w0, t0, *, num_wires: int, num_ticks: int):
+    """Dense scatter-add of zero-padded patches into the grid.
+
+    patches: (N, PW_pad, PT_pad); padding pixels must already be zero, and
+    padded extents may hang off the grid edge (dropped, like the kernel's
+    tile clamp — callers guarantee true patch pixels stay in bounds).
+    """
+    n, pw, pt = patches.shape
+    dw = jnp.arange(pw, dtype=jnp.int32)[None, :, None]
+    dt = jnp.arange(pt, dtype=jnp.int32)[None, None, :]
+    wi = w0[:, None, None] + dw
+    ti = t0[:, None, None] + dt
+    inb = (wi < num_wires) & (ti < num_ticks)
+    flat = jnp.where(inb, wi * num_ticks + ti, num_wires * num_ticks)
+    grid = jnp.zeros((num_wires * num_ticks + 1,), patches.dtype)
+    grid = grid.at[flat.reshape(-1)].add(
+        jnp.where(inb, patches, 0.0).reshape(-1), mode="drop")
+    return grid[:-1].reshape(num_wires, num_ticks)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * 16x16 (256 chips, one v5e pod) and 2x16x16 (512 chips, two pods)
+  * every assigned architecture x its input shapes
+  * records memory_analysis (fits?), cost_analysis (FLOPs/bytes), and the
+    collective schedule (bytes per collective op parsed from the HLO)
+
+Results are cached to benchmarks/results/dryrun/<cell>.json so repeated runs
+(and the roofline report) are incremental.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch ID] [--shape NAME]
+      [--multi-pod | --single-pod] [--force]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.config import SHAPES, get_config
+from repro.configs import ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_decode, build_prefill, build_train
+from repro.parallel.sharding import act_rules_for, use_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+#: cells skipped by design (sub-quadratic requirement), see DESIGN.md
+LONG_OK = {"mamba2-780m", "recurrentgemma-2b"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|c64|f64|s64|u64|s16|u16)"
+                       r"\[([0-9,]*)\]")
+
+_BYTES = {"f64": 8, "c64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes of every collective op in the HLO, by kind."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "<shape> <name> = <op>(" where op contains a collective kind
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        if "-done(" in s:
+            continue  # bytes counted on the -start op
+        kind = m.group(2)
+        per_kind[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes_by_kind": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             force: bool = False) -> Dict[str, Any]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    cell = f"{arch_id}__{shape_name}__{mesh_tag}"
+    path = os.path.join(RESULTS_DIR, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    shape = SHAPES[shape_name]
+    result: Dict[str, Any] = {"cell": cell, "arch": arch_id,
+                              "shape": shape_name, "mesh": mesh_tag}
+
+    if shape_name == "long_500k" and arch_id not in LONG_OK:
+        result["status"] = "skipped"
+        result["reason"] = ("full-attention arch: 500k decode requires "
+                            "sub-quadratic attention (DESIGN.md)")
+        _save(path, result)
+        return result
+    cfg = get_config(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with use_mesh(mesh, act_rules_for(cfg, mesh)):
+            if shape.kind == "train":
+                fn, args, shardings, jit_kw = build_train(cfg, shape, mesh)
+            elif shape.kind == "prefill":
+                fn, args, shardings, jit_kw = build_prefill(cfg, shape, mesh)
+            else:
+                fn, args, shardings, jit_kw = build_decode(cfg, shape, mesh)
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              **jit_kw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            # trip-count-aware accounting (XLA's cost_analysis counts while
+            # bodies once; scan-over-layers would be undercounted by L)
+            from repro.launch.hlo_cost import analyze as hlo_analyze
+
+            acc = hlo_analyze(hlo)
+
+        result.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops": float(acc["flops"]),
+            "bytes_accessed": float(acc["hbm_bytes"]),
+            "flops_xla_uncorrected": float(cost.get("flops", -1.0)),
+            "bytes_xla_uncorrected": float(cost.get("bytes accessed", -1.0)),
+            "memory": _mem_dict(mem),
+            "collectives": {
+                "bytes_by_kind": acc["collectives"],
+                "counts": coll["counts"],
+                "total_bytes": float(acc["collective_bytes"]),
+                "static_text_bytes": coll["total_bytes"],
+            },
+            "n_devices": int(np.prod(list(mesh.shape.values()))),
+        })
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    _save(path, result)
+    return result
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[k] = float(getattr(mem, k))
+        except Exception:  # noqa: BLE001
+            pass
+    return out
+
+
+def _save(path, result):
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ([True] if args.multi_pod else
+              [False] if args.single_pod else [False, True])
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi_pod, force=args.force)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    per_dev = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+                    extra = (f"flops={r['flops']:.3g} "
+                             f"coll={r['collectives']['total_bytes']:.3g}B "
+                             f"temp={per_dev:.2f}GiB "
+                             f"[{r.get('lower_s', 0):.0f}+"
+                             f"{r.get('compile_s', 0):.0f}s]")
+                elif status == "error":
+                    failures += 1
+                    extra = r["error"][:120]
+                print(f"{r['cell']:<55} {status:<8} {extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,279 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — a
+scan-over-layers program is undercounted by the trip count (64x for a 64-layer
+model). This analyzer parses the optimized HLO text, builds the computation
+call graph, and scales while bodies by their ``known_trip_count``:
+
+  flops            : 2 * prod(out) * prod(contracted dims) per dot
+  collective bytes : operand bytes per collective op, by kind
+  hbm bytes        : operand+output bytes of top-level (post-fusion)
+                     instructions — fusion internals excluded
+
+Returned totals are per-device (the input is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f64": 8, "c64": 8, "c128": 16, "s64": 8, "u64": 8, "f32": 4,
+          "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "s8": 1, "u8": 1, "pred": 1, "token": 0, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*=\s*(.+?)\s+"
+                       r"([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+class Instruction:
+    __slots__ = ("name", "type_str", "op", "rest")
+
+    def __init__(self, name, type_str, op, rest):
+        self.name = name
+        self.type_str = type_str
+        self.op = op
+        self.rest = rest
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[Instruction] = []
+        self.symbols: Dict[str, str] = {}   # instr name -> type string
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{") and " -> " in line:
+            name = hdr.group(1).lstrip("%")
+            cur = Computation(name)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            # parameters: "%p = f32[..] parameter(0)" matches; skip others
+            continue
+        name = m.group(1).lstrip("%")
+        instr = Instruction(name, m.group(2), m.group(3), line)
+        cur.instrs.append(instr)
+        cur.symbols[name] = m.group(2)
+    return comps, entry
+
+
+_CALLED = re.compile(r"(?:body|to_apply|calls)=(%?[\w\.\-]+)")
+_CONDITION = re.compile(r"condition=(%?[\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _operand_names(rest: str) -> List[str]:
+    m = _OPERANDS.search(rest[rest.index("("):] if "(" in rest else rest)
+    if not m:
+        return []
+    out = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok[1:])
+        elif re.match(r"^[\w\.\-]+$", tok) and not tok.isdigit():
+            out.append(tok)
+    return out
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    out = _first_shape(instr.type_str)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    prod_out = 1
+    for d in out_dims:
+        prod_out *= d
+    ops = _operand_names(instr.rest)
+    contract = _CONTRACT.search(instr.rest)
+    k = 1
+    if ops and contract is not None:
+        lhs_type = comp.symbols.get(ops[0])
+        if lhs_type:
+            sh = _first_shape(lhs_type)
+            if sh:
+                dims = sh[1]
+                for idx in contract.group(1).split(","):
+                    if idx:
+                        i = int(idx)
+                        if i < len(dims):
+                            k *= dims[i]
+    return 2.0 * prod_out * k
+
+
+def _inplace_update(ins: Instruction, comp: Computation, out_b: int) -> bool:
+    """True when a fusion's output aliases its largest operand (in-place
+    dynamic-update-slice pattern inside scans)."""
+    op_bytes = [_shape_bytes(comp.symbols.get(o, ""))
+                for o in _operand_names(ins.rest)]
+    return bool(op_bytes) and max(op_bytes) == out_b and out_b > (1 << 20)
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}}
+
+    memo: Dict[str, Dict] = {}
+    top: List[Tuple[float, str]] = []   # (bytes*trip, "kind op_name")
+    _META = re.compile(r'op_name="([^"]+)"')
+
+    _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota", "partition-id",
+                   "replica-id"}
+
+    trip_stack: List[int] = [1]
+
+    def comp_cost(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        zero = {"flops": 0.0, "hbm": 0.0,
+                "coll": {k: 0.0 for k in _COLLECTIVES}}
+        if comp is None:
+            memo[name] = zero
+            return zero
+        memo[name] = zero  # cycle guard
+        flops = 0.0
+        hbm = 0.0
+        coll = {k: 0.0 for k in _COLLECTIVES}
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                called_w = _CALLED.findall(ins.rest)
+                called = called_w
+                tm = _TRIP.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    # infer the trip count from the loop bound constant in
+                    # the condition computation (scan bounds are static)
+                    trip = 1
+                    cm = _CONDITION.search(ins.rest)
+                    if cm:
+                        cond = comps.get(cm.group(1).lstrip("%"))
+                        if cond is not None:
+                            bounds = [int(x) for i2 in cond.instrs
+                                      for x in _CONST_INT.findall(i2.rest)]
+                            if bounds:
+                                trip = max(bounds)
+                for c in called:
+                    trip_stack.append(trip_stack[-1] * trip)
+                    sub = comp_cost(c.lstrip("%"))
+                    trip_stack.pop()
+                    flops += trip * sub["flops"]
+                    hbm += trip * sub["hbm"]
+                    for k in _COLLECTIVES:
+                        coll[k] += trip * sub["coll"][k]
+                continue
+            if op in ("call", "conditional"):
+                for c in _CALLED.findall(ins.rest):
+                    sub = comp_cost(c.lstrip("%"))
+                    flops += sub["flops"]
+                    hbm += sub["hbm"]
+                    for k in _COLLECTIVES:
+                        coll[k] += sub["coll"][k]
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                nbytes = sum(
+                    _shape_bytes(comp.symbols.get(o, ""))
+                    for o in _operand_names(ins.rest))
+                if nbytes == 0:
+                    nbytes = _shape_bytes(ins.type_str)
+                coll[base] += nbytes
+                hbm += nbytes
+                meta = _META.search(ins.rest)
+                top.append((nbytes * trip_stack[-1],
+                            f"{base} {meta.group(1) if meta else ins.name}"))
+                continue
+            if op.endswith("-done") or op in _SKIP_BYTES:
+                continue
+            if op == "dot":
+                flops += _dot_flops(ins, comp)
+            if op == "fusion":
+                # estimate fused dot flops: scan called fusion computation
+                for c in _CALLED.findall(ins.rest):
+                    fcomp = comps.get(c.lstrip("%"))
+                    if fcomp:
+                        for fins in fcomp.instrs:
+                            if fins.op == "dot":
+                                flops += _dot_flops(fins, fcomp)
+            # HBM traffic estimator: ~2x output bytes per materialized value
+            # (written once, read ~once downstream). Operand sums would charge
+            # full stacked arrays to every dynamic-slice; in-place update
+            # patterns (output aliases the big operand) are charged the
+            # *update* bytes instead.
+            out_b = _shape_bytes(ins.type_str)
+            if op in ("dynamic-update-slice", "scatter") or (
+                    op == "fusion" and _inplace_update(ins, comp, out_b)):
+                op_bytes = [
+                    _shape_bytes(comp.symbols.get(o, ""))
+                    for o in _operand_names(ins.rest)]
+                small = sum(b for b in op_bytes if b != max(op_bytes or [0]))
+                hbm += 2 * min(small, out_b)
+            else:
+                hbm += 2 * out_b
+        result = {"flops": flops, "hbm": hbm, "coll": coll}
+        memo[name] = result
+        return result
+
+    total = comp_cost(entry)
+    top.sort(reverse=True)
+    return {
+        "flops": total["flops"],
+        "hbm_bytes": total["hbm"],
+        "collective_bytes": sum(total["coll"].values()),
+        "collectives": total["coll"],
+        "top_collectives": top[:12],
+    }

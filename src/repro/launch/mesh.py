@@ -1,0 +1,23 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is pure
+data parallelism over the (slower) inter-pod links.
+
+Functions, not module constants: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. ((2, 4), ("data", "model")))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,46 @@
+"""LArTPC simulation launcher (the paper's workload):
+``python -m repro.launch.sim [--events N] [--pipeline fig3|fig4] [...]``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import LArTPCConfig, apply_overrides, get_config
+from repro.core import generate_depos, make_sim_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--events", type=int, default=2)
+    ap.add_argument("--depos", type=int, default=0)
+    ap.add_argument("--set", nargs="*", default=[])
+    args = ap.parse_args()
+
+    cfg = get_config("lartpc-uboone", smoke=args.smoke)
+    if args.depos:
+        cfg = apply_overrides(cfg, {"num_depos": args.depos})
+    if args.set:
+        cfg = apply_overrides(cfg, dict(kv.split("=", 1) for kv in args.set))
+
+    sim = make_sim_fn(cfg)
+    key = jax.random.key(0)
+    for ev in range(args.events):
+        k = jax.random.fold_in(key, ev)
+        depos = generate_depos(k, cfg)
+        t0 = time.perf_counter()
+        out = sim(k, depos)
+        jax.block_until_ready(out.adc)
+        dt = time.perf_counter() - t0
+        adc = np.asarray(out.adc)
+        print(f"event {ev}: {depos.n} depos -> {adc.shape} ADC in "
+              f"{dt*1e3:.0f} ms ({depos.n/dt:.3g} depos/s), "
+              f"max dev {np.abs(adc - cfg.adc_baseline).max()}")
+
+
+if __name__ == "__main__":
+    main()

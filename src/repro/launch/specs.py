@@ -1,0 +1,223 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape) cell.
+
+Everything here is allocation-free: dry-runs lower against ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import (ModelConfig, OptimizerConfig, ParallelConfig,
+                          ShapeConfig, SHAPES)
+from repro.models.model import Model
+from repro.models.transformer import init_caches
+from repro.optim.adamw import OptState
+from repro.parallel.sharding import ACT_RULES, build_spec, current_act_rules
+from repro.train.train_step import make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Batch input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        out["tokens"] = sds((b, s - cfg.frontend_tokens), jnp.int32)
+        out["frontend_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model),
+                                     jnp.float32)
+    elif cfg.is_encoder_decoder:
+        out["tokens"] = sds((b, s), jnp.int32)
+        out["enc_embeds"] = sds((b, s, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    return out
+
+
+_BATCH_NAMES = {
+    "tokens": ("batch", None),
+    "frontend_embeds": ("batch", None, None),
+    "enc_embeds": ("batch", None, None),
+}
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    rules = current_act_rules()
+    return {k: NamedSharding(mesh, build_spec(v.shape, _BATCH_NAMES[k], mesh,
+                                              rules))
+            for k, v in batch_specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Cache specs + shardings
+# ---------------------------------------------------------------------------
+
+#: logical names per cache leaf field, keyed by (field, ndim)
+_CACHE_NAMES = {
+    ("k", 5): ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    ("v", 5): ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    ("pos", 2): ("layers", "kv_seq"),
+    ("index", 1): ("layers",),
+    ("c_kv", 4): ("layers", "batch", "kv_seq", None),
+    ("k_rope", 4): ("layers", "batch", "kv_seq", None),
+    ("state", 5): ("layers", "batch", "heads", "head_dim", "state"),
+    ("state", 3): ("layers", "batch", "mlp"),     # rg-lru h
+    ("h", 3): ("layers", "batch", "mlp"),
+    ("conv", 4): ("layers", "batch", None, "mlp"),
+}
+
+#: decode rules: KV-cache sequence dim sharded over `model` (SP decode)
+DECODE_RULES = dict(ACT_RULES)
+DECODE_RULES["kv_seq"] = "model"
+DECODE_RULES["heads"] = "model"
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree of the decode caches."""
+    return jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, jnp.dtype(cfg.dtype)))
+
+
+def cache_shardings(cache_tree, mesh: Mesh, rules=None):
+    rules = rules or DECODE_RULES
+
+    def one(path, leaf):
+        field = None
+        for p in reversed(path):
+            name = getattr(p, "name", None)
+            if name is not None:
+                field = str(name)
+                break
+            key = getattr(p, "key", None)
+            if key is not None and str(key) in ("conv", "h"):
+                field = str(key)
+                break
+        names = _CACHE_NAMES.get((field, len(leaf.shape)))
+        if names is None:
+            names = (None,) * len(leaf.shape)
+        return NamedSharding(mesh, build_spec(leaf.shape, names, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# Step builders (lowered by the dry-run and the launcher)
+# ---------------------------------------------------------------------------
+
+def build_train(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                opt_cfg: Optional[OptimizerConfig] = None,
+                parallel: Optional[ParallelConfig] = None,
+                zero1: bool = False):
+    """Returns (step_fn, example_args, in_shardings) for jit lowering.
+
+    zero1: params are TP-sharded only (replicated over data); optimizer
+    moments/master stay fully sharded (ZeRO-1). GSPMD then materializes the
+    classic reduce-scatter(grads) + all-gather(params) update instead of
+    per-layer FSDP gathers / activation all-reduces.
+    """
+    from repro.parallel.sharding import PARAM_RULES, rules_without_fsdp
+
+    model = Model(arch_cfg)
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    params = model.shapes()
+    prules = rules_without_fsdp(PARAM_RULES) if zero1 else PARAM_RULES
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            model.specs(mesh, rules=prules))
+    opt_param_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 model.specs(mesh)) if zero1 else param_sh)
+    step_fn = make_train_step(model, opt_cfg, parallel,
+                              grad_shardings=opt_param_sh if zero1 else None)
+    low_precision = jnp.dtype(arch_cfg.param_dtype) != jnp.float32
+    f32_like = jax.tree.map(lambda p: sds(p.shape, jnp.float32), params)
+    opt_state = OptState(
+        step=sds((), jnp.int32),
+        m=f32_like, v=f32_like,
+        master=f32_like if low_precision else None)
+    opt_sh = OptState(
+        step=NamedSharding(mesh, P()),
+        m=opt_param_sh, v=opt_param_sh,
+        master=opt_param_sh if low_precision else None)
+
+    batch = input_specs(arch_cfg, shape)
+    batch_sh = batch_shardings(batch, mesh)
+    repl = NamedSharding(mesh, P())
+    metrics_sh = {"loss": repl, "aux": repl, "lr": repl, "grad_norm": repl}
+    return (step_fn, (params, opt_state, batch),
+            (param_sh, opt_sh, batch_sh),
+            {"out_shardings": (param_sh, opt_sh, metrics_sh),
+             "donate_argnums": (0, 1)})
+
+
+def build_decode(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """serve_step: one new token against a seq_len cache."""
+    model = Model(arch_cfg)
+    b = shape.global_batch
+    max_len = shape.seq_len
+    params = model.shapes()
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            model.specs(mesh))
+    caches = cache_specs(arch_cfg, b, max_len)
+    caches_sh = cache_shardings(caches, mesh)
+    tok = sds((b, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, build_spec((b, 1), ("batch", None), mesh,
+                                            ACT_RULES))
+    index = sds((), jnp.int32)
+    index_sh = NamedSharding(mesh, P())
+
+    if arch_cfg.is_encoder_decoder:
+        enc_len = min(max_len, 4096)
+        enc = (sds((b, enc_len, arch_cfg.d_model), jnp.dtype(arch_cfg.dtype)),
+               sds((b, enc_len), jnp.int32))
+        enc_sh = (NamedSharding(mesh, build_spec(
+            (b, enc_len, arch_cfg.d_model), ("batch", None, None), mesh,
+            ACT_RULES)),
+            NamedSharding(mesh, build_spec((b, enc_len), ("batch", None),
+                                           mesh, ACT_RULES)))
+
+        def serve_step(params, tok, caches, index, enc_out):
+            return model.decode_step(params, {"tokens": tok}, caches, index,
+                                     extras={"enc_out": enc_out})
+
+        return (serve_step, (params, tok, caches, index, enc),
+                (param_sh, tok_sh, caches_sh, index_sh, enc_sh),
+                {"out_shardings": (None, caches_sh), "donate_argnums": (2,)})
+
+    def serve_step(params, tok, caches, index):
+        return model.decode_step(params, {"tokens": tok}, caches, index)
+
+    return (serve_step, (params, tok, caches, index),
+            (param_sh, tok_sh, caches_sh, index_sh),
+            {"out_shardings": (None, caches_sh), "donate_argnums": (2,)})
+
+
+def build_prefill(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """prefill step: full prompt through the model, filling caches."""
+    model = Model(arch_cfg)
+    b, s = shape.global_batch, shape.seq_len
+    params = model.shapes()
+    param_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                            model.specs(mesh))
+    batch = input_specs(arch_cfg, shape)
+    batch_sh = batch_shardings(batch, mesh)
+    caches = cache_specs(arch_cfg, b, s)
+    caches_sh = cache_shardings(caches, mesh)
+
+    def prefill_step(params, batch, caches):
+        logits, caches, _ = model.prefill(params, batch, caches)
+        return logits, caches
+
+    return (prefill_step, (params, batch, caches),
+            (param_sh, batch_sh, caches_sh),
+            {"out_shardings": (None, caches_sh), "donate_argnums": (2,)})

@@ -1,0 +1,512 @@
+"""Attention: GQA (+qk-norm, softcap, sliding window), MLA, cross-attention.
+
+All softmax attention goes through one flash-style KV-blocked kernel
+(``flash_attention``) — pure JAX ``lax.scan`` with online softmax, O(Sq·block)
+score memory instead of O(Sq·Skv). Works for train (causal/local/bidir),
+prefill, and decode (Sq=1 against a long cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MLAConfig, ModelConfig
+from repro.models.layers import apply_rope, rmsnorm, rope_table, softcap
+from repro.parallel.sharding import current_act_rules, current_mesh, logical
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blocked attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
+                    window=None, logit_cap: float = 0.0,
+                    kv_block: int = 1024, kv_valid: Optional[jax.Array] = None):
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D); positions: (B,Sq)/(B,Skv) int32.
+
+    window: sliding-window width. May be a static int (0/None = global) or a
+    traced scalar (0 = global) — the traced form lets a scanned layer stack
+    alternate local/global per layer (gemma-2).
+    kv_valid: (B,Skv) bool — False entries masked (decode cache padding).
+    Returns (B,Sq,H,D).
+
+    Custom VJP: the backward pass recomputes scores blockwise (the flash
+    recipe) instead of letting AD save the O(Sq*Skv) scan residuals.
+    """
+    use_window = window is not None and not (isinstance(window, int)
+                                             and window == 0)
+    if q.shape[1] <= 8:
+        # decode: direct einsum path. With the KV cache sequence-sharded over
+        # the `model` axis, GSPMD turns the softmax + weighted sum into the
+        # sequence-parallel (psum of partial max/sum) form automatically; the
+        # scan path would instead all-gather the cache.
+        return _direct_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                 window=window if use_window else None,
+                                 logit_cap=logit_cap, kv_valid=kv_valid)
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kv_block = min(kv_block, skv)
+    nblk = (skv + kv_block - 1) // kv_block
+    pad = nblk * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_valid = (jnp.pad(kv_valid, ((0, 0), (0, pad)))
+                    if kv_valid is not None
+                    else jnp.concatenate(
+                        [jnp.ones((b, skv), bool),
+                         jnp.zeros((b, pad), bool)], axis=1))
+    elif kv_valid is None:
+        kv_valid = jnp.ones((b, skv), bool)
+    window_arr = jnp.asarray(window if use_window else 0, jnp.int32)
+    out = _flash_core(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+                      causal, bool(use_window), float(logit_cap),
+                      int(kv_block))
+    return out[:, :, :, :]
+
+
+def _blk_mask(pblk, q_pos, vldblk, causal, use_window, window_arr):
+    mask = vldblk[:, None, None, None, :]
+    if causal:
+        mask = mask & (pblk[:, None, None, None, :]
+                       <= q_pos[:, None, None, :, None])
+    if use_window:
+        in_win = (pblk[:, None, None, None, :]
+                  > q_pos[:, None, None, :, None] - window_arr)
+        mask = mask & (in_win | (window_arr == 0))
+    return mask
+
+
+def _blk_scores(qg, kblk, scale, logit_cap):
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kblk,
+                   preferred_element_type=jnp.float32) * scale
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    return s
+
+
+def _to_blocks(k, v, kv_pos, kv_valid, nblk, kv_block):
+    b, _, hkv, d = k.shape
+    kb = jnp.transpose(k, (0, 2, 1, 3)).reshape(b, hkv, nblk, kv_block, d)
+    vb = jnp.transpose(v, (0, 2, 1, 3)).reshape(b, hkv, nblk, kv_block, d)
+    posb = kv_pos.reshape(b, nblk, kv_block)
+    validb = kv_valid.reshape(b, nblk, kv_block)
+    return (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0),
+            jnp.moveaxis(posb, 1, 0), jnp.moveaxis(validb, 1, 0))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _flash_core(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+                causal, use_window, logit_cap, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+                             causal, use_window, logit_cap, kv_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+                    causal, use_window, logit_cap, kv_block):
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nblk = skv // kv_block
+    scale = d ** -0.5
+    qg = jnp.transpose(q.reshape(b, sq, hkv, g, d), (0, 2, 3, 1, 4))
+    blks = _to_blocks(k, v, kv_pos, kv_valid, nblk, kv_block)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk, vldblk = blk
+        s = _blk_scores(qg, kblk, scale, logit_cap)
+        mask = _blk_mask(pblk, q_pos, vldblk, causal, use_window, window_arr)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), blks)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))       # (B,Hkv,G,Sq)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h, d)
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+               causal, use_window, logit_cap, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, kv_valid, window_arr,
+                               causal, use_window, logit_cap, kv_block)
+    return out, (q, k, v, q_pos, kv_pos, kv_valid, window_arr, out, lse)
+
+
+def _flash_bwd(causal, use_window, logit_cap, kv_block, res, dout):
+    q, k, v, q_pos, kv_pos, kv_valid, window_arr, out, lse = res
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nblk = skv // kv_block
+    scale = d ** -0.5
+    qg = jnp.transpose(q.reshape(b, sq, hkv, g, d), (0, 2, 3, 1, 4))
+    dog = jnp.transpose(dout.reshape(b, sq, hkv, g, d), (0, 2, 3, 1, 4)
+                        ).astype(jnp.float32)
+    outg = jnp.transpose(out.reshape(b, sq, hkv, g, d), (0, 2, 3, 1, 4)
+                         ).astype(jnp.float32)
+    delta = jnp.sum(dog * outg, axis=-1)           # (B,Hkv,G,Sq)
+    blks = _to_blocks(k, v, kv_pos, kv_valid, nblk, kv_block)
+
+    def step(dq_acc, blk):
+        kblk, vblk, pblk, vldblk = blk
+        s = _blk_scores(qg, kblk, scale, logit_cap)
+        mask = _blk_mask(pblk, q_pos, vldblk, causal, use_window, window_arr)
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)  # (B,K,G,Sq,C)
+        dv_blk = jnp.einsum("bkgqc,bkgqd->bkcd", p, dog)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", dog, vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if logit_cap:
+            # d/dx softcap(x) = 1 - (softcap(x)/cap)^2 ; s holds softcap(x)
+            ds = ds * (1.0 - jnp.square(s / logit_cap))
+        dq_acc = dq_acc + jnp.einsum("bkgqc,bkcd->bkgqd", ds,
+                                     kblk.astype(jnp.float32)) * scale
+        dk_blk = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qg.astype(jnp.float32)
+                            ) * scale
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    dqg, (dk_blks, dv_blks) = jax.lax.scan(step, dq0, blks)
+    dq = jnp.transpose(dqg, (0, 3, 1, 2, 4)).reshape(b, sq, h, d).astype(q.dtype)
+    # (nblk, B, Hkv, C, D) -> (B, Skv, Hkv, D)
+    dk = jnp.transpose(jnp.moveaxis(dk_blks, 0, 2).reshape(b, hkv, skv, d),
+                       (0, 2, 1, 3)).astype(k.dtype)
+    dv = jnp.transpose(jnp.moveaxis(dv_blks, 0, 2).reshape(b, hkv, skv, d),
+                       (0, 2, 1, 3)).astype(v.dtype)
+    return dq, dk, dv, None, None, None, None
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _direct_attention(q, k, v, q_pos, kv_pos, *, causal, window, logit_cap,
+                      kv_valid):
+    """Unblocked attention for tiny Sq (decode). q: (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    mask = (kv_valid if kv_valid is not None
+            else jnp.ones((b, skv), bool))[:, None, None, None, :]
+    if causal:
+        mask = mask & (kv_pos[:, None, None, None, :]
+                       <= q_pos[:, None, None, :, None])
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        in_win = (kv_pos[:, None, None, None, :]
+                  > q_pos[:, None, None, :, None] - w)
+        mask = mask & (in_win | (w == 0))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def make_gqa(make, path: str, cfg: ModelConfig):
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    s = d ** -0.5
+    p = {
+        "wq": make(f"{path}.wq", (d, h, dh), ("embed", "heads", "head_dim"), s),
+        "wk": make(f"{path}.wk", (d, hkv, dh), ("embed", "kv_heads", "head_dim"), s),
+        "wv": make(f"{path}.wv", (d, hkv, dh), ("embed", "kv_heads", "head_dim"), s),
+        "wo": make(f"{path}.wo", (h, dh, d), ("heads", "head_dim", "embed"),
+                   (h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = make(f"{path}.q_norm", (dh,), ("head_dim",), init="zeros")
+        p["k_norm"] = make(f"{path}.k_norm", (dh,), ("head_dim",), init="zeros")
+    return p
+
+
+def _maybe_repeat_kv(k, v, num_heads: int):
+    """Repeat kv heads to full head count when TP wants it.
+
+    With q heads sharded over a `model` axis that does not divide the kv-head
+    count (e.g. 8 kv heads on a 16-way axis), the grouped (hkv, g) reshape
+    inside flash attention makes the q sharding unpartitionable and GSPMD
+    replicates the whole attention. Repeating kv to the full head count keeps
+    every tensor sharded by `heads` — the repeated kv is *smaller* per device
+    than a replicated un-repeated one.
+    """
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return k, v
+    rules = current_act_rules()
+    if rules.get("heads") != "model":
+        return k, v
+    m = mesh.shape["model"]
+    hkv = k.shape[2]
+    if hkv % m == 0 or num_heads % m != 0 or num_heads == hkv:
+        return k, v
+    rep = num_heads // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    k = logical(k, ("batch", "attn_seq", "heads", "head_dim"))
+    v = logical(v, ("batch", "attn_seq", "heads", "head_dim"))
+    return k, v
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache. `pos` stores the absolute position held in each
+    slot (-1 = empty), so windowed layers can use a cache of only
+    `window_size` slots and wrap around."""
+
+    k: jax.Array       # (B, S_max, Hkv, Dh)
+    v: jax.Array
+    pos: jax.Array     # (S_max,) int32 absolute position per slot, -1 empty
+    index: jax.Array   # scalar int32: number of tokens written so far
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                  dtype) -> KVCache:
+    dh = cfg.resolved_head_dim
+    shape = (layers, batch, max_len, cfg.num_kv_heads, dh)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.full((layers, max_len), -1, jnp.int32),
+                   index=jnp.zeros((layers,), jnp.int32))
+
+
+def gqa_attention(params, x, positions, cfg: ModelConfig, *,
+                  causal: bool = True, window: int = 0,
+                  cache: Optional[KVCache] = None):
+    """x: (B,S,D); positions: (B,S). cache -> (out, new_cache_entry)."""
+    b, sq, d = x.shape
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = logical(q, ("batch", "attn_seq", "heads", "head_dim"))
+    k = logical(k, ("batch", "attn_seq", "kv_heads", "head_dim"))
+    v = logical(v, ("batch", "attn_seq", "kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    cos, sin = rope_table(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        kr, vr = _maybe_repeat_kv(k, v, cfg.num_heads)
+        out = flash_attention(q, kr, vr, positions, positions, causal=causal,
+                              window=window, logit_cap=cfg.attn_logit_softcap)
+        new_cache = None
+    elif sq >= cache.k.shape[1]:
+        # bulk prefill: attend over the fresh k/v (identical to the cache
+        # contents, but avoids gathering the sequence-sharded cache); write
+        # the last S_max tokens into the cache in one shot.
+        smax = cache.k.shape[1]
+        kr, vr = _maybe_repeat_kv(k, v, cfg.num_heads)
+        out = flash_attention(q, kr, vr, positions, positions, causal=causal,
+                              window=window, logit_cap=cfg.attn_logit_softcap)
+        new_cache = KVCache(
+            k=k[:, sq - smax:].astype(cache.k.dtype),
+            v=v[:, sq - smax:].astype(cache.v.dtype),
+            pos=positions[0, sq - smax:].astype(jnp.int32),
+            index=cache.index + sq)
+    else:
+        # decode/append: write k,v at slot index % S_max (ring buffer for
+        # windowed caches; plain append while index < S_max)
+        smax = cache.k.shape[1]
+        write = cache.index % smax
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, write, 0, 0))
+        new_pos = jax.lax.dynamic_update_slice(
+            cache.pos, cache.index + jnp.arange(sq, dtype=jnp.int32), (write,))
+        new_index = cache.index + sq
+        kv_pos = jnp.broadcast_to(new_pos[None], (b, smax))
+        kv_valid = kv_pos >= 0
+        out = flash_attention(q, kc.astype(q.dtype), vc.astype(q.dtype),
+                              positions, kv_pos, causal=causal, window=window,
+                              logit_cap=cfg.attn_logit_softcap,
+                              kv_valid=kv_valid)
+        new_cache = KVCache(k=kc, v=vc, pos=new_pos, index=new_index)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return logical(out, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention(params, x, enc_kv, positions_q, positions_kv,
+                    cfg: ModelConfig):
+    """enc_kv: precomputed (k, v) from encoder output (B,Senc,Hkv,Dh)."""
+    k, v = enc_kv
+    dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+    out = flash_attention(q, k.astype(q.dtype), v.astype(q.dtype), positions_q,
+                          positions_kv, causal=False,
+                          logit_cap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return logical(out, ("batch", "seq", "embed"))
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(enc_out.dtype))
+    if cfg.qk_norm:
+        k = rmsnorm(k, params["k_norm"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def make_mla(make, path: str, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv, dc = m.nope_head_dim, m.rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    s = d ** -0.5
+    return {
+        "wq": make(f"{path}.wq", (d, h, dn + dr), ("embed", "heads", "head_dim"), s),
+        "w_dkv": make(f"{path}.w_dkv", (d, dc), ("embed", "kv_lora"), s),
+        "w_kr": make(f"{path}.w_kr", (d, dr), ("embed", "head_dim"), s),
+        "kv_norm": make(f"{path}.kv_norm", (dc,), ("kv_lora",), init="zeros"),
+        "w_uk": make(f"{path}.w_uk", (dc, h, dn), ("kv_lora", "heads", "head_dim"),
+                     dc ** -0.5),
+        "w_uv": make(f"{path}.w_uv", (dc, h, dv), ("kv_lora", "heads", "head_dim"),
+                     dc ** -0.5),
+        "wo": make(f"{path}.wo", (h, dv, d), ("heads", "head_dim", "embed"),
+                   (h * dv) ** -0.5),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S_max, dc) — compressed latent
+    k_rope: jax.Array  # (B, S_max, dr)
+    index: jax.Array
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                   dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((layers, batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((layers, batch, max_len, m.rope_head_dim), dtype),
+        index=jnp.zeros((layers,), jnp.int32))
+
+
+def _mla_expanded(params, x, qn, qr, kr, c_kv, positions, cfg: ModelConfig):
+    """Expanded (training/prefill) MLA attention."""
+    m: MLAConfig = cfg.mla
+    b, sq = x.shape[0], x.shape[1]
+    h = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    scale_dim = dn + dr
+    kn = jnp.einsum("bsc,chk->bshk", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsc,chk->bshk", c_kv, params["w_uv"].astype(x.dtype))
+    k_full = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], (b, sq, h, dr))], axis=-1)
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+    # pin head-sharding: the rope half of k is a head-broadcast (replicated)
+    # tensor — without the constraint GSPMD reshards the concat every flash
+    # block and all-reduces in the backward scan
+    names = ("batch", "attn_seq", "heads", "head_dim")
+    k_full = logical(k_full, names)
+    q_full = logical(q_full, names)
+    # pad v to the score head-dim so the flash kernel sees uniform D
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, scale_dim - dv)))
+    v_pad = logical(v_pad, names)
+    out = flash_attention(q_full, k_full, v_pad, positions, positions,
+                          causal=True)[..., :dv]
+    return out, None
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig, *,
+                  cache: Optional[MLACache] = None):
+    m: MLAConfig = cfg.mla
+    b, sq, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    scale_dim = dn + dr
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    qn, qr = q[..., :dn], q[..., dn:]
+    cos, sin = rope_table(positions, dr, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+
+    c_kv = rmsnorm(jnp.einsum("bsd,dc->bsc", x, params["w_dkv"].astype(x.dtype)),
+                   params["kv_norm"])
+    kr = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(x.dtype))
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]  # shared head
+
+    if cache is not None and sq >= cache.c_kv.shape[1]:
+        # bulk prefill: expanded attention + one-shot compressed cache write
+        smax = cache.c_kv.shape[1]
+        out, _ = _mla_expanded(params, x, qn, qr, kr, c_kv, positions, cfg)
+        new_cache = MLACache(
+            c_kv=c_kv[:, sq - smax:].astype(cache.c_kv.dtype),
+            k_rope=kr[:, sq - smax:].astype(cache.k_rope.dtype),
+            index=cache.index + sq)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return logical(y, ("batch", "seq", "embed")), new_cache
+
+    if cache is None:
+        out, new_cache = _mla_expanded(params, x, qn, qr, kr, c_kv, positions,
+                                       cfg)
+    else:
+        # absorbed decode form: score via latent space, cache stays compressed
+        ckc = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, cache.index, 0))
+        krc = jax.lax.dynamic_update_slice(
+            cache.k_rope, kr.astype(cache.k_rope.dtype), (0, cache.index, 0))
+        new_index = cache.index + sq
+        smax = ckc.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32)[None],
+                                  (b, smax))
+        kv_valid = kv_pos < new_index
+        # absorb W_uk into q: q_lat (B,S,H,dc)
+        q_lat = jnp.einsum("bshk,chk->bshc", qn, params["w_uk"].astype(x.dtype))
+        # scores in latent+rope space; treat (q_lat|qr) vs (c_kv|k_rope)
+        q_cat = jnp.concatenate([q_lat, qr], axis=-1)          # (B,S,H,dc+dr)
+        k_cat = jnp.concatenate([ckc, krc], axis=-1).astype(x.dtype)  # (B,Smax,dc+dr)
+        k_cat = k_cat[:, :, None, :]                            # Hkv = 1
+        # value = latent, padded to match score dim for the flash kernel
+        v_lat = jnp.pad(ckc.astype(x.dtype),
+                        ((0, 0), (0, 0), (0, dr)))[:, :, None, :]
+        # flash divides by sqrt(dc+dr); rescale so the net scale is the
+        # expanded form's 1/sqrt(dn+dr)
+        out_lat = flash_attention(
+            q_cat * (((m.kv_lora_rank + dr) ** 0.5) * (scale_dim ** -0.5)),
+            k_cat, v_lat, positions, kv_pos, causal=True,
+            kv_valid=kv_valid)[..., :m.kv_lora_rank]
+        out = jnp.einsum("bshc,chk->bshk", out_lat,
+                         params["w_uv"].astype(x.dtype))
+        new_cache = MLACache(c_kv=ckc, k_rope=krc, index=new_index)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return logical(y, ("batch", "seq", "embed")), new_cache

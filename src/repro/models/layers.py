@@ -1,0 +1,156 @@
+"""Shared NN layers: norms, MLPs, RoPE, embeddings, softcap."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.parallel.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(make, path: str, d: int, kind: str):
+    if kind == "layernorm":
+        return {
+            "scale": make(f"{path}.scale", (d,), ("embed",), init="ones"),
+            "bias": make(f"{path}.bias", (d,), ("embed",), init="zeros"),
+        }
+    return {"scale": make(f"{path}.scale", (d,), ("embed",), init="zeros")}
+
+
+def apply_norm(params, x, kind: str):
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def make_mlp(make, path: str, d_model: int, d_ff: int, kind: str,
+             scale: Optional[float] = None):
+    s_in = scale or d_model ** -0.5
+    s_out = (d_ff) ** -0.5
+    p = {
+        "w_up": make(f"{path}.w_up", (d_model, d_ff), ("embed", "mlp"), s_in),
+        "w_down": make(f"{path}.w_down", (d_ff, d_model), ("mlp", "embed"), s_out),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = make(f"{path}.w_gate", (d_model, d_ff), ("embed", "mlp"), s_in)
+    return p
+
+
+def apply_mlp(params, x, kind: str):
+    # names cover the common (batch, seq, feature) case; a constraint with
+    # None entries would force those dims REPLICATED, so batch/seq must be
+    # named here.
+    lead = ("batch", "seq")[:x.ndim - 1]
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    up = logical(up, lead + ("mlp",))
+    if kind == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(up))
+    elif kind == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        h = jax.nn.relu(up)
+    out = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+    return logical(out, lead + ("embed",))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_table(positions, head_dim: int, theta: float):
+    """positions (...,) -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def make_embedding(make, path: str, vocab: int, d_model: int):
+    return {"table": make(f"{path}.table", (vocab, d_model),
+                          ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    x = params["table"].astype(cfg.dtype)[tokens]
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return logical(x, ("batch", "seq", "embed"))
+
+
+def unembed(params, x, cfg: ModelConfig, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # vocab-padding rows never win: mask to a large negative
+        viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+        logits = jnp.where(viota < cfg.vocab_size, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return logical(logits, ("batch", "seq", "vocab"))
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal temporal conv. x (B,S,C), w (K,C); cache (B,K-1,C)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+    new_cache = xp[:, -(k - 1):] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    return out, new_cache

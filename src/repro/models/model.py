@@ -1,0 +1,233 @@
+"""Top-level model API: build/init/apply for every assigned architecture.
+
+  model = Model(cfg)
+  params = model.init(key)
+  logits, aux = model.forward(params, batch)            # train/prefill
+  logits, caches = model.decode_step(params, batch, caches)
+
+`batch` is a dict:
+  tokens           (B, S) int32            — LM tokens (decoder side)
+  frontend_embeds  (B, F, D)               — VLM patch embeddings (optional)
+  enc_embeds       (B, S_enc, D)           — audio frame embeddings (enc-dec)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import params as P
+from repro.models.encdec import build_encdec_params, encdec_forward, encode
+from repro.models.transformer import (build_params, init_caches, lm_forward,
+                                      stacks_for)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.is_encoder_decoder
+
+    # -- parameter builders ------------------------------------------------
+    def _build(self, make):
+        if self.is_encdec:
+            return build_encdec_params(make, self.cfg)
+        return build_params(make, self.cfg)
+
+    def init(self, key: jax.Array):
+        return P.init_params(self._build, key, dtype=jnp.dtype(self.cfg.param_dtype))
+
+    def shapes(self):
+        return P.param_shapes(self._build, dtype=jnp.dtype(self.cfg.param_dtype))
+
+    def specs(self, mesh, rules=None):
+        return P.param_specs(self._build, mesh, rules)
+
+    # -- forward -----------------------------------------------------------
+    def forward(self, params, batch: Dict[str, Any], features_only=False):
+        """Training/scoring forward (no cache). Returns (logits, aux)."""
+        cfg = self.cfg
+        if self.is_encdec:
+            out, _, aux, _ = encdec_forward(
+                params, batch["tokens"], batch["enc_embeds"], cfg,
+                features_only=features_only)
+            return out, aux
+        out, _, aux = lm_forward(
+            params, batch["tokens"], cfg,
+            frontend_embeds=batch.get("frontend_embeds"),
+            features_only=features_only)
+        return out, aux
+
+    def unembed_table(self, params):
+        return (params["embed"]["table"] if self.cfg.tie_embeddings
+                else params["unembed"]["table"])
+
+    # -- serving -----------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int):
+        return init_caches(self.cfg, batch, max_len, jnp.dtype(self.cfg.dtype))
+
+    def prefill(self, params, batch, caches):
+        """Prefill the cache with a full prompt; returns (logits, caches, extras)."""
+        cfg = self.cfg
+        if self.is_encdec:
+            logits, caches, _, enc_out = encdec_forward(
+                params, batch["tokens"], batch["enc_embeds"], cfg,
+                caches=caches, start_index=jnp.zeros((), jnp.int32))
+            return logits, caches, {"enc_out": enc_out}
+        logits, caches, _ = lm_forward(
+            params, batch["tokens"], cfg, caches=caches,
+            frontend_embeds=batch.get("frontend_embeds"),
+            start_index=jnp.zeros((), jnp.int32))
+        return logits, caches, {}
+
+    def decode_step(self, params, batch, caches, index, extras=None):
+        """One decode step. batch["tokens"]: (B, 1). index: scalar position."""
+        cfg = self.cfg
+        if self.is_encdec:
+            logits, caches, _, _ = encdec_forward(
+                params, batch["tokens"], batch.get("enc_embeds"), cfg,
+                caches=caches, enc_out=(extras or {}).get("enc_out"),
+                start_index=index)
+            return logits, caches
+        logits, caches, _ = lm_forward(params, batch["tokens"], cfg,
+                                       caches=caches, start_index=index)
+        return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_lm_loss(features, table, labels, cfg: ModelConfig,
+                    loss_mask=None, n_chunks: int = 8):
+    """Fused unembed + cross-entropy, scanned over sequence chunks.
+
+    Never materializes the full (B, S, V) logits — each rematted chunk
+    computes (B, S/n, V), reduces to per-token NLL, and is recomputed in the
+    backward pass. This is the big-vocab memory fix (256k-vocab archs would
+    otherwise hold multiple multi-GB f32 logits buffers).
+    """
+    from repro.models.layers import softcap as _softcap
+
+    b, s, d = features.shape
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    xc = features.reshape(b, n_chunks, cs, d).swapaxes(0, 1)  # (n, B, cs, D)
+    lc = labels.reshape(b, n_chunks, cs).swapaxes(0, 1)
+    mc = (loss_mask.reshape(b, n_chunks, cs).swapaxes(0, 1)
+          if loss_mask is not None
+          else jnp.ones((n_chunks, b, cs), jnp.float32))
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xb, lb, mb = inp
+        logits = jnp.einsum("bsd,vd->bsv", xb, table.astype(xb.dtype))
+        logits = _softcap(logits, cfg.final_logit_softcap)
+        logits = logits.astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(viota < cfg.vocab_size, logits, -1e9)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(viota == lb[..., None], logits, 0.0), axis=-1)
+        nll = (logz - ll) * mb
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mb)), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+def lm_loss(logits, labels, loss_mask=None):
+    """Cross-entropy. labels: (B, S) int32; mask optional (B, S).
+
+    The label logit is extracted with an iota-compare reduction instead of
+    ``take_along_axis`` — a gather over the vocab dim would force GSPMD to
+    all-gather the vocab-sharded logits (tens of GB); the masked reduction
+    stays sharded and psums a scalar.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = vocab_iota == labels[..., None]
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - ll
+    if loss_mask is not None:
+        nll = nll * loss_mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for 6ND roofline)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    total = cfg.vocab_size * d  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d
+
+    def attn_params():
+        if cfg.mla is not None:
+            m = cfg.mla
+            dn, dr, dv, dc = (m.nope_head_dim, m.rope_head_dim, m.v_head_dim,
+                              m.kv_lora_rank)
+            return (d * cfg.num_heads * (dn + dr) + d * dc + d * dr
+                    + dc * cfg.num_heads * (dn + dv) + cfg.num_heads * dv * d)
+        return (d * cfg.num_heads * dh + 2 * d * cfg.num_kv_heads * dh
+                + cfg.num_heads * dh * d)
+
+    def mlp_params(ff):
+        mult = 3 if cfg.mlp_kind == "swiglu" else 2
+        return mult * d * ff
+
+    def moe_params(active):
+        m = cfg.moe
+        routed = m.num_experts if not active else m.top_k
+        p = d * m.num_experts  # router (always resident)
+        p += routed * 3 * d * m.expert_ff
+        p += mlp_params(m.expert_ff * m.num_shared) if m.num_shared else 0
+        return p
+
+    fam = cfg.family
+    if fam == "ssm":
+        c = cfg.ssm
+        d_in = c.expand * d
+        h = d_in // c.head_dim
+        per = (d * (2 * d_in + 2 * c.state_dim + h)
+               + c.conv_width * (d_in + 2 * c.state_dim)
+               + 3 * h + d_in + d_in * d)
+        total += cfg.num_layers * per
+    elif fam == "hybrid":
+        c = cfg.rglru
+        w = c.lru_width or d
+        per_rec = 2 * d * w + c.conv_width * w + 2 * w * w + w + w * d
+        per_attn = attn_params()
+        pat = c.block_pattern
+        n_rec = sum(1 for k in pat if k == "recurrent")
+        n_att = len(pat) - n_rec
+        groups = cfg.num_layers // len(pat)
+        total += groups * (n_rec * per_rec + n_att * per_attn
+                           + len(pat) * mlp_params(cfg.d_ff))
+    elif fam == "moe":
+        m = cfg.moe
+        first = m.first_moe_layer
+        total += cfg.num_layers * attn_params()
+        total += first * mlp_params(m.dense_ff or cfg.d_ff)
+        total += (cfg.num_layers - first) * moe_params(active_only)
+    else:
+        layers = cfg.num_layers
+        total += layers * (attn_params() + mlp_params(cfg.d_ff))
+        if cfg.is_encoder_decoder:
+            # encoder stack + decoder cross-attention
+            total += cfg.num_encoder_layers * (attn_params()
+                                               + mlp_params(cfg.d_ff))
+            total += cfg.num_layers * attn_params()
+    return int(total)

@@ -1,0 +1,109 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE-style: shared + routed top-k).
+
+Dispatch is sort-based (MaxText/Megablocks-style), not mask-einsum — the
+one-hot dispatch tensor for 160 experts x 32k tokens would be terabytes.
+
+  1. router logits -> top-k expert ids + weights per token
+  2. (token, expert) pairs sorted by expert id -> contiguous per-expert runs
+  3. every expert gathers up to CAPACITY tokens from its run (static shapes;
+     overflow tokens are dropped, standard capacity-factor semantics)
+  4. batched expert FFN: einsum over the expert dim (sharded over `model` —
+     expert parallelism); GSPMD inserts the token all-to-all
+  5. weighted scatter back to token order + shared-expert contribution
+
+Aux load-balance loss (switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models.layers import apply_mlp, make_mlp
+from repro.parallel.sharding import logical
+
+
+def make_moe(make, path: str, cfg: ModelConfig):
+    m: MoEConfig = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.expert_ff
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": make(f"{path}.router", (d, e), ("embed", "experts"), s_in,
+                       dtype_=jnp.float32),
+        "w_gate": make(f"{path}.w_gate", (e, d, f),
+                       ("experts", "embed", "expert_mlp"), s_in),
+        "w_up": make(f"{path}.w_up", (e, d, f),
+                     ("experts", "embed", "expert_mlp"), s_in),
+        "w_down": make(f"{path}.w_down", (e, f, d),
+                       ("experts", "expert_mlp", "embed"), s_out),
+    }
+    if m.num_shared:
+        p["shared"] = make_mlp(make, f"{path}.shared", d,
+                               m.expert_ff * m.num_shared, cfg.mlp_kind)
+    return p
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int,
+              factor: float = 1.25) -> int:
+    cap = int(tokens * top_k / num_experts * factor) + 1
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def apply_moe(params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(t, d)
+
+    # --- route ---
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)                       # (T,k)
+    weights = weights / jnp.sum(weights, -1, keepdims=True)
+
+    # --- aux load-balance loss (switch-style) ---
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], e), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * e * m.router_aux_weight
+
+    # --- sort (token,expert) pairs by expert ---
+    flat_e = ids.reshape(-1)                                     # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+
+    # --- per-expert capacity gather indices ---
+    cap = _capacity(t, e, k, m.capacity_factor)
+    counts = jnp.bincount(se, length=e)                          # (E,)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]  # (E,C)
+    in_run = jnp.arange(cap)[None, :] < counts[:, None]
+    pos_c = jnp.minimum(pos, t * k - 1)
+    tok_idx = jnp.where(in_run, st[pos_c], 0)                    # (E,C)
+    tok_w = jnp.where(in_run, sw[pos_c], 0.0)
+
+    # --- expert FFN over gathered tokens ---
+    xe = xf[tok_idx]                                             # (E,C,D)
+    xe = logical(xe, ("experts", "capacity", "embed"))
+    gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(xe.dtype))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(xe.dtype))
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xe.dtype))
+    ye = logical(ye, ("experts", "capacity", "embed"))
+    ye = ye * tok_w[..., None].astype(ye.dtype)
+
+    # --- scatter back to token order ---
+    out = jnp.zeros((t, d), ye.dtype)
+    out = out.at[tok_idx.reshape(-1)].add(
+        ye.reshape(-1, d) * in_run.reshape(-1, 1).astype(ye.dtype))
+    out = out.reshape(b, s, d)
+
+    if m.num_shared:
+        out = out + apply_mlp(params["shared"], x, cfg.mlp_kind)
+    return logical(out, ("batch", "seq", "embed")), aux

@@ -1,0 +1,70 @@
+"""Parameter system: params are plain pytrees; builders are interpreted twice.
+
+A model is defined by a ``build(make)`` function that calls
+``make(path, shape, names, ...)`` for every parameter. Three interpreters:
+
+  init_params   -> arrays (random init, per-path key folding)
+  param_shapes  -> jax.ShapeDtypeStruct tree (for dry-run / eval_shape)
+  param_names   -> logical-dim-name tree (for sharding specs)
+
+This gives flax-like ergonomics with zero dependencies and exact structural
+agreement between the three trees.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def init_params(build: Callable, key: jax.Array, dtype=jnp.float32):
+    def make(path, shape, names, scale=1.0, init="normal", dtype_=None):
+        dt = dtype_ or dtype
+        if init == "zeros":
+            return jnp.zeros(shape, dt)
+        if init == "ones":
+            return jnp.ones(shape, dt)
+        k = _path_key(key, path)
+        if init == "uniform_angle":
+            return jax.random.uniform(k, shape, dt, -3.14159, 3.14159)
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    return build(make)
+
+
+def param_shapes(build: Callable, dtype=jnp.float32):
+    def make(path, shape, names, scale=1.0, init="normal", dtype_=None):
+        return jax.ShapeDtypeStruct(shape, dtype_ or dtype)
+
+    return build(make)
+
+
+def param_names(build: Callable):
+    def make(path, shape, names, scale=1.0, init="normal", dtype_=None):
+        return tuple(names)
+
+    return build(make)
+
+
+def param_specs(build: Callable, mesh, rules=None):
+    """PartitionSpec tree for the build's parameters."""
+    from repro.parallel.sharding import PARAM_RULES, build_spec
+
+    rules = rules or PARAM_RULES
+
+    def make(path, shape, names, scale=1.0, init="normal", dtype_=None):
+        return build_spec(shape, names, mesh, rules)
+
+    return build(make)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

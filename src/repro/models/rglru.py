@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_a x_t)           (recurrence gate)
+    i_t = sigmoid(W_i x_t)           (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan over time (log-depth, parallel); decode
+carries h. Bounded state -> assigned the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, RGLRUConfig
+from repro.models.layers import causal_conv1d
+from repro.parallel.sharding import logical
+
+_C = 8.0
+
+
+def make_rglru(make, path: str, cfg: ModelConfig):
+    c: RGLRUConfig = cfg.rglru
+    d = cfg.d_model
+    w = c.lru_width or d
+    s = d ** -0.5
+    return {
+        "w_y": make(f"{path}.w_y", (d, w), ("embed", "mlp"), s),
+        "w_x": make(f"{path}.w_x", (d, w), ("embed", "mlp"), s),
+        "conv_w": make(f"{path}.conv_w", (c.conv_width, w), ("conv", "mlp"), 0.2),
+        "w_a": make(f"{path}.w_a", (w, w), ("mlp", None), w ** -0.5),
+        "w_i": make(f"{path}.w_i", (w, w), ("mlp", None), w ** -0.5),
+        "lam": make(f"{path}.lam", (w,), ("mlp",), init="uniform_angle"),
+        "w_out": make(f"{path}.w_out", (w, d), ("mlp", "embed"), w ** -0.5),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array      # (B, W) recurrent state
+    conv: jax.Array   # (B, K-1, W)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, layers: int, dtype):
+    c = cfg.rglru
+    w = c.lru_width or cfg.d_model
+    return RGLRUCache(
+        h=jnp.zeros((layers, batch, w), jnp.float32),
+        conv=jnp.zeros((layers, batch, c.conv_width - 1, w), dtype))
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a,b: (B,S,W)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(params, x, cfg: ModelConfig,
+                cache: Optional[RGLRUCache] = None
+                ) -> Tuple[jax.Array, Optional[RGLRUCache]]:
+    """Griffin recurrent block. x (B,S,D) -> (B,S,D)."""
+    bsz, s, d = x.shape
+    y_gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                    params["w_y"].astype(x.dtype)))
+    xi = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(x.dtype))
+    xi, new_conv = causal_conv1d(xi, params["conv_w"],
+                                 cache.conv if cache is not None else None)
+    xi = logical(xi, ("batch", "seq", "mlp"))
+
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf,
+                                  params["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf,
+                                  params["w_i"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if cache is None:
+        h = _lru_scan(a, gated)
+        new_cache = None
+    else:
+        h0 = cache.h
+        if s == 1:
+            h = (a[:, 0] * h0 + gated[:, 0])[:, None]
+            h_last = h[:, 0]
+        else:
+            h = _lru_scan(a, gated, h0)
+            h_last = h[:, -1]
+        new_cache = RGLRUCache(h=h_last, conv=new_conv)
+
+    out = h.astype(x.dtype) * y_gate
+    out = jnp.einsum("bsw,wd->bsd", out, params["w_out"].astype(x.dtype))
+    return logical(out, ("batch", "seq", "embed")), new_cache

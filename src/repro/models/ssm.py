@@ -1,0 +1,196 @@
+"""Mamba-2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode uses the O(1) recurrent state update. This is
+the sub-quadratic family assigned the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.layers import causal_conv1d, rmsnorm
+from repro.parallel.sharding import logical
+
+
+def make_ssm(make, path: str, cfg: ModelConfig):
+    c: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = c.expand * d
+    h = d_in // c.head_dim
+    g = 1  # single B/C group
+    n = c.state_dim
+    conv_dim = d_in + 2 * g * n
+    s = d ** -0.5
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": make(f"{path}.w_in", (d, 2 * d_in + 2 * g * n + h),
+                     ("embed", "mlp"), s),
+        "conv_w": make(f"{path}.conv_w", (c.conv_width, conv_dim),
+                       ("conv", "mlp"), 0.2),
+        "a_log": make(f"{path}.a_log", (h,), ("heads",), init="zeros"),
+        "dt_bias": make(f"{path}.dt_bias", (h,), ("heads",), init="zeros"),
+        "d_skip": make(f"{path}.d_skip", (h,), ("heads",), init="ones"),
+        "norm": make(f"{path}.norm", (d_in,), ("mlp",), init="zeros"),
+        "w_out": make(f"{path}.w_out", (d_in, d), ("mlp", "embed"),
+                      d_in ** -0.5),
+    }
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array   # (B, H, P, N)
+    conv: jax.Array    # (B, K-1, conv_dim)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, layers: int, dtype) -> SSMCache:
+    c = cfg.ssm
+    d_in = c.expand * cfg.d_model
+    h = d_in // c.head_dim
+    conv_dim = d_in + 2 * c.state_dim
+    return SSMCache(
+        state=jnp.zeros((layers, batch, h, c.head_dim, c.state_dim), jnp.float32),
+        conv=jnp.zeros((layers, batch, c.conv_width - 1, conv_dim), dtype))
+
+
+def _segsum(x):
+    """x: (..., L) log-decays -> (..., L, L) lower-triangular cumulative sums."""
+    l = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., None, :], x.shape + (l,))
+    xx = jnp.swapaxes(xx, -1, -2)                  # (..., L(out), L(in))
+    mask_lower = jnp.tril(jnp.ones((l, l), bool), k=-1)
+    xx = jnp.where(mask_lower, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)
+    mask_incl = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask_incl, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B,L,H,P)  dt: (B,L,H)  a: (H,) negative reals
+    b, c: (B,L,G,N) with H % G == 0.
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    nc = l // chunk
+    assert nc * chunk == l, "seq must be divisible by ssd chunk"
+
+    xs = x.reshape(bsz, nc, chunk, h, p)
+    dts = dt.reshape(bsz, nc, chunk, h)
+    bs = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cs = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    da = dts * a[None, None, None, :]              # (B,NC,CL,H) log-decay
+    da_h = jnp.moveaxis(da, -1, 2)                 # (B,NC,H,CL)
+    cum = jnp.cumsum(da_h, axis=-1)
+
+    # intra-chunk (quadratic within chunk)
+    ll = jnp.exp(_segsum(da_h))                    # (B,NC,H,CL,CL)
+    y_diag = jnp.einsum("bzlhn,bzshn,bzhls,bzsh,bzshp->bzlhp",
+                        cs, bs, ll, dts, xs)
+
+    # chunk states
+    decay_states = jnp.exp(cum[..., -1:] - cum)    # (B,NC,H,CL)
+    states = jnp.einsum("bzshn,bzhs,bzsh,bzshp->bzhpn",
+                        bs, decay_states, dts, xs)  # (B,NC,H,P,N)
+
+    # inter-chunk recurrence: S_z = exp(sum da_z) * S_{z-1} + states_z
+    chunk_decay = jnp.exp(cum[..., -1])            # (B,NC,H)
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), x.dtype))
+
+    def step(s_prev, inp):
+        dec, st = inp                              # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)         # (NC,B,H)
+    sts = jnp.moveaxis(states, 1, 0)               # (NC,B,H,P,N)
+    final_state, prev_states = jax.lax.scan(step, s0, (decs, sts))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,NC,H,P,N)
+
+    # inter-chunk output
+    state_decay = jnp.exp(cum)                     # (B,NC,H,CL)
+    y_off = jnp.einsum("bzlhn,bzhpn,bzhl->bzlhp", cs, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, a, b, c, state):
+    """One-token recurrent update. x (B,1,H,P); b,c (B,1,G,N); state (B,H,P,N)."""
+    bsz, _, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bt = jnp.repeat(b[:, 0], rep, axis=1)          # (B,H,N)
+    ct = jnp.repeat(c[:, 0], rep, axis=1)
+    dtt = dt[:, 0]                                  # (B,H)
+    da = jnp.exp(dtt * a[None, :])                  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, x[:, 0])
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+    return y[:, None], state                        # (B,1,H,P)
+
+
+def apply_ssm(params, x, cfg: ModelConfig,
+              cache: Optional[SSMCache] = None
+              ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Mamba-2 block. x (B,S,D) -> (B,S,D). cache -> decode path."""
+    c: SSMConfig = cfg.ssm
+    bsz, s, d = x.shape
+    d_in = c.expand * d
+    h = d_in // c.head_dim
+    g, n = 1, c.state_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["w_in"].astype(x.dtype))
+    z, xb, bc, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1)
+    # conv over [x, B, C] jointly (mamba2 convention)
+    conv_in = jnp.concatenate([xb, bc], axis=-1)   # (B,S,d_in+2gn)
+    conv_out, new_conv = causal_conv1d(
+        conv_in, params["conv_w"],
+        cache.conv if cache is not None else None)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :d_in]
+    b_mat = conv_out[..., d_in:d_in + g * n].reshape(bsz, s, g, n)
+    c_mat = conv_out[..., d_in + g * n:].reshape(bsz, s, g, n)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    xh = xc.reshape(bsz, s, h, c.head_dim)
+    xh = logical(xh, ("batch", "seq", "heads", "head_dim"))
+
+    if cache is None:
+        chunk = min(c.chunk, s)
+        y, _ = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                           b_mat.astype(jnp.float32),
+                           c_mat.astype(jnp.float32), chunk)
+        new_cache = None
+    elif s > 1:
+        # prefill-into-cache: chunked SSD carrying the recurrent state
+        chunk = min(c.chunk, s)
+        y, new_state = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                                   b_mat.astype(jnp.float32),
+                                   c_mat.astype(jnp.float32), chunk,
+                                   initial_state=cache.state)
+        new_cache = SSMCache(state=new_state, conv=new_conv)
+    else:
+        y, new_state = ssd_decode_step(
+            xh.astype(jnp.float32), dt, a, b_mat.astype(jnp.float32),
+            c_mat.astype(jnp.float32), cache.state)
+        new_cache = SSMCache(state=new_state, conv=new_conv)
+
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(x.dtype))
+    return logical(out, ("batch", "seq", "embed")), new_cache

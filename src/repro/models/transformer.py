@@ -1,0 +1,339 @@
+"""Decoder-only LM assembly: heterogeneous layer stacks under lax.scan.
+
+An architecture is a sequence of *stacks*; each stack is N structurally
+identical layers whose parameters are created with a leading (N, ...) layer
+dim and executed with ``jax.lax.scan`` (small HLO -> fast 512-device
+compiles). Per-layer *value* variation inside a stack (e.g. gemma-2's
+local/global alternation) is threaded as scanned-over arrays; *structural*
+variation (dense-vs-MoE first layer, griffin's rec/rec/attn pattern) becomes
+separate stacks or grouped layers.
+"""
+from __future__ import annotations
+
+import functools
+
+from jax.ad_checkpoint import checkpoint_name
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.parallel.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# Stack descriptors
+# ---------------------------------------------------------------------------
+
+class Stack(NamedTuple):
+    name: str
+    n: int              # number of scanned units (layers or groups)
+    mixer: str          # gqa | mla | ssm | griffin_group
+    ffn: str            # mlp | moe | none
+    d_ff: int           # ffn hidden size (dense path)
+    pattern: tuple = ()  # griffin group pattern (per-stack)
+
+
+def stacks_for(cfg: ModelConfig) -> List[Stack]:
+    fam = cfg.family
+    if fam == "ssm":
+        return [Stack("layers", cfg.num_layers, "ssm", "none", 0)]
+    if fam == "hybrid":
+        pat = cfg.rglru.block_pattern
+        n_full = cfg.num_layers // len(pat)
+        out = [Stack("groups", n_full, "griffin_group", "mlp", cfg.d_ff,
+                     pattern=tuple(pat))]
+        rem = cfg.num_layers - n_full * len(pat)
+        if rem:  # e.g. recurrentgemma-2b: 26 = 8*(r,r,a) + (r,r)
+            out.append(Stack("tail_group", 1, "griffin_group", "mlp",
+                             cfg.d_ff, pattern=tuple(pat[:rem])))
+        return out
+    if fam == "moe":
+        mixer = "mla" if cfg.mla is not None else "gqa"
+        first = cfg.moe.first_moe_layer
+        out = []
+        if first > 0:
+            out.append(Stack("dense_layers", first, mixer, "mlp",
+                             cfg.moe.dense_ff or cfg.d_ff))
+        out.append(Stack("moe_layers", cfg.num_layers - first, mixer, "moe", 0))
+        return out
+    # dense / vlm / audio-decoder
+    return [Stack("layers", cfg.num_layers, "gqa", "mlp", cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# Single block (one layer) param build + apply
+# ---------------------------------------------------------------------------
+
+def make_block(make, path: str, cfg: ModelConfig, stack: Stack,
+               cross_attn: bool = False):
+    p: Dict[str, Any] = {}
+    d = cfg.d_model
+    if stack.mixer == "gqa":
+        p["ln_mix"] = L.make_norm(make, f"{path}.ln_mix", d, cfg.norm_kind)
+        p["mix"] = attn.make_gqa(make, f"{path}.mix", cfg)
+    elif stack.mixer == "mla":
+        p["ln_mix"] = L.make_norm(make, f"{path}.ln_mix", d, cfg.norm_kind)
+        p["mix"] = attn.make_mla(make, f"{path}.mix", cfg)
+    elif stack.mixer == "ssm":
+        p["ln_mix"] = L.make_norm(make, f"{path}.ln_mix", d, cfg.norm_kind)
+        p["mix"] = ssm_mod.make_ssm(make, f"{path}.mix", cfg)
+    elif stack.mixer == "griffin_group":
+        pat = stack.pattern or cfg.rglru.block_pattern
+        for j, kind in enumerate(pat):
+            p[f"g{j}_ln_mix"] = L.make_norm(make, f"{path}.g{j}.ln_mix", d,
+                                            cfg.norm_kind)
+            if kind == "recurrent":
+                p[f"g{j}_mix"] = rglru_mod.make_rglru(make, f"{path}.g{j}.mix", cfg)
+            else:
+                p[f"g{j}_mix"] = attn.make_gqa(make, f"{path}.g{j}.mix", cfg)
+            p[f"g{j}_ln_ffn"] = L.make_norm(make, f"{path}.g{j}.ln_ffn", d,
+                                            cfg.norm_kind)
+            p[f"g{j}_ffn"] = L.make_mlp(make, f"{path}.g{j}.ffn", d,
+                                        stack.d_ff, cfg.mlp_kind)
+    if cross_attn:
+        p["ln_cross"] = L.make_norm(make, f"{path}.ln_cross", d, cfg.norm_kind)
+        p["cross"] = attn.make_gqa(make, f"{path}.cross", cfg)
+
+    if stack.mixer != "griffin_group":
+        if stack.ffn == "mlp":
+            p["ln_ffn"] = L.make_norm(make, f"{path}.ln_ffn", d, cfg.norm_kind)
+            p["ffn"] = L.make_mlp(make, f"{path}.ffn", d, stack.d_ff,
+                                  cfg.mlp_kind)
+        elif stack.ffn == "moe":
+            p["ln_ffn"] = L.make_norm(make, f"{path}.ln_ffn", d, cfg.norm_kind)
+            p["ffn"] = moe_mod.make_moe(make, f"{path}.ffn", cfg)
+    return p
+
+
+def apply_block(p, x, positions, cfg: ModelConfig, stack: Stack,
+                window, cache, cross_kv=None, enc_positions=None):
+    """Apply one layer. window: scalar (0 = global). Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    if stack.mixer == "griffin_group":
+        pat = stack.pattern or cfg.rglru.block_pattern
+        for j, kind in enumerate(pat):
+            h = L.apply_norm(p[f"g{j}_ln_mix"], x, cfg.norm_kind)
+            if kind == "recurrent":
+                sub = cache.get(f"g{j}") if cache else None
+                out, nc = rglru_mod.apply_rglru(p[f"g{j}_mix"], h, cfg, sub)
+                if nc is not None:
+                    new_cache[f"g{j}"] = nc
+            else:
+                sub = cache.get(f"g{j}") if cache else None
+                out, nc = attn.gqa_attention(
+                    p[f"g{j}_mix"], h, positions, cfg, causal=True,
+                    window=cfg.window_size, cache=sub)
+                if nc is not None:
+                    new_cache[f"g{j}"] = nc
+            x = x + checkpoint_name(out, "mix_out")
+            h = L.apply_norm(p[f"g{j}_ln_ffn"], x, cfg.norm_kind)
+            out = L.apply_mlp(p[f"g{j}_ffn"], h, cfg.mlp_kind)
+            x = x + checkpoint_name(out, "ffn_out")
+        return x, new_cache, aux
+
+    # --- mixer ---
+    h = L.apply_norm(p["ln_mix"], x, cfg.norm_kind)
+    if stack.mixer == "gqa":
+        out, nc = attn.gqa_attention(p["mix"], h, positions, cfg, causal=True,
+                                     window=window,
+                                     cache=cache.get("kv") if cache else None)
+        if nc is not None:
+            new_cache["kv"] = nc
+    elif stack.mixer == "mla":
+        out, nc = attn.mla_attention(p["mix"], h, positions, cfg,
+                                     cache=cache.get("mla") if cache else None)
+        if nc is not None:
+            new_cache["mla"] = nc
+    elif stack.mixer == "ssm":
+        out, nc = ssm_mod.apply_ssm(p["mix"], h, cfg,
+                                    cache=cache.get("ssm") if cache else None)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    out = checkpoint_name(out, "mix_out")
+    x = x + out
+
+    # --- cross attention (enc-dec decoder) ---
+    if cross_kv is not None:
+        h = L.apply_norm(p["ln_cross"], x, cfg.norm_kind)
+        x = x + attn.cross_attention(p["cross"], h, cross_kv, positions,
+                                     enc_positions, cfg)
+
+    # --- ffn ---
+    if stack.ffn == "mlp":
+        h = L.apply_norm(p["ln_ffn"], x, cfg.norm_kind)
+        out = L.apply_mlp(p["ffn"], h, cfg.mlp_kind)
+        x = x + checkpoint_name(out, "ffn_out")
+    elif stack.ffn == "moe":
+        h = L.apply_norm(p["ln_ffn"], x, cfg.norm_kind)
+        out, aux_l = moe_mod.apply_moe(p["ffn"], h, cfg)
+        x = x + checkpoint_name(out, "ffn_out")
+        aux = aux + aux_l
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Per-layer value variation (windows)
+# ---------------------------------------------------------------------------
+
+def window_schedule(cfg: ModelConfig, stack: Stack) -> jnp.ndarray:
+    """(n,) int32 window per layer; 0 = global attention."""
+    if cfg.attn_kind == "local":
+        return jnp.full((stack.n,), cfg.window_size, jnp.int32)
+    if cfg.attn_kind == "local_global":
+        # gemma-2: even layers local, odd layers global
+        ids = jnp.arange(stack.n, dtype=jnp.int32)
+        return jnp.where(ids % 2 == 0, cfg.window_size, 0)
+    return jnp.zeros((stack.n,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Full decoder-only LM
+# ---------------------------------------------------------------------------
+
+def build_params(make, cfg: ModelConfig, cross_attn: bool = False,
+                 with_embed: bool = True):
+    """Parameter tree for the decoder (stacked per stack)."""
+    p: Dict[str, Any] = {}
+    if with_embed:
+        p["embed"] = L.make_embedding(make, "embed", cfg.padded_vocab,
+                                      cfg.d_model)
+    for stack in stacks_for(cfg):
+        def stacked_make(path, shape, names, *a, **kw):
+            return make(path, (stack.n,) + tuple(shape),
+                        ("layers",) + tuple(names), *a, **kw)
+
+        p[stack.name] = make_block(stacked_make, stack.name, cfg, stack,
+                                   cross_attn=cross_attn)
+    p["final_norm"] = L.make_norm(make, "final_norm", cfg.d_model, cfg.norm_kind)
+    if not cfg.tie_embeddings and with_embed:
+        p["unembed"] = {"table": make(
+            "unembed.table", (cfg.padded_vocab, cfg.d_model),
+            ("vocab", "embed"), cfg.d_model ** -0.5)}
+    return p
+
+
+#: tensors worth saving under selective remat: block-level outputs only.
+#: Flash-attention internals (per-block scores) are deliberately NOT saved —
+#: they are recomputed in the backward pass (standard flash recipe); saving
+#: them costs O(S^2) memory.
+SAVE_NAMES = ("mix_out", "ffn_out")
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.save_only_these_names(*SAVE_NAMES))
+
+
+def run_stacks(params, x, positions, cfg: ModelConfig, caches=None,
+               cross_kv=None, enc_positions=None):
+    """Run every stack. caches: {stack_name: stacked cache pytree} or None.
+
+    Returns (x, new_caches, aux_total).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    for stack in stacks_for(cfg):
+        sp = params[stack.name]
+        windows = window_schedule(cfg, stack)
+        cache = caches.get(stack.name) if caches is not None else None
+
+        def body(carry, per_layer):
+            xx = carry
+            lp, win, csl = per_layer
+            xx, new_c, aux = apply_block(
+                lp, xx, positions, cfg, stack, win, csl,
+                cross_kv=cross_kv, enc_positions=enc_positions)
+            return xx, (new_c, aux)
+
+        body = _remat_wrap(body, cfg)
+        if cache is None:
+            # no cache: scan over (params, windows) only
+            x, (new_c, auxs) = jax.lax.scan(
+                lambda c, pl: body(c, (pl[0], pl[1], None)),
+                x, (sp, windows))
+        else:
+            x, (new_c, auxs) = jax.lax.scan(body, x, (sp, windows, cache))
+            new_caches[stack.name] = new_c
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, new_caches, aux_total
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, *, caches=None,
+               positions=None, frontend_embeds=None, cross_kv=None,
+               enc_positions=None, start_index=None, features_only=False):
+    """Decoder-only forward.
+
+    tokens: (B, S) int32. frontend_embeds: (B, F, D) prepended (VLM).
+    caches: per-stack stacked caches (decode). start_index: scalar cache fill.
+    features_only: return final hidden states instead of logits (the trainer
+    applies a chunked fused unembed+CE to avoid materializing full logits).
+    Returns (logits_or_features, new_caches, aux).
+    """
+    x = L.embed(params["embed"], tokens, cfg)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        if start_index is not None:
+            positions = start_index + jnp.arange(s, dtype=jnp.int32)[None, :]
+            positions = jnp.broadcast_to(positions, (b, s))
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    x, new_caches, aux = run_stacks(params, x, positions, cfg, caches=caches,
+                                    cross_kv=cross_kv,
+                                    enc_positions=enc_positions)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind)
+    if features_only:
+        return x, new_caches, aux
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["unembed"]["table"])
+    logits = L.unembed({"table": table}, x, cfg)
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init (stacked per stack)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                cross_attn: bool = False):
+    caches: Dict[str, Any] = {}
+    for stack in stacks_for(cfg):
+        if stack.mixer == "gqa":
+            win = max_len
+            if cfg.attn_kind == "local":
+                win = min(max_len, cfg.window_size)
+            caches[stack.name] = {"kv": attn.init_kv_cache(
+                cfg, batch, win, stack.n, dtype)}
+        elif stack.mixer == "mla":
+            caches[stack.name] = {"mla": attn.init_mla_cache(
+                cfg, batch, max_len, stack.n, dtype)}
+        elif stack.mixer == "ssm":
+            caches[stack.name] = {"ssm": ssm_mod.init_ssm_cache(
+                cfg, batch, stack.n, dtype)}
+        elif stack.mixer == "griffin_group":
+            sub: Dict[str, Any] = {}
+            for j, kind in enumerate(stack.pattern or cfg.rglru.block_pattern):
+                if kind == "recurrent":
+                    sub[f"g{j}"] = rglru_mod.init_rglru_cache(
+                        cfg, batch, stack.n, dtype)
+                else:
+                    sub[f"g{j}"] = attn.init_kv_cache(
+                        cfg, batch, min(max_len, cfg.window_size), stack.n,
+                        dtype)
+            caches[stack.name] = sub
+    return caches

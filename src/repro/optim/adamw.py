@@ -1,0 +1,107 @@
+"""Sharded AdamW + LR schedules (no optax dependency).
+
+Optimizer state is a pytree mirroring params (m, v) and therefore inherits
+the params' sharding (FSDP shards optimizer state for free — ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any = None   # f32 master weights when params are low precision
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    low_precision = any(x.dtype != jnp.float32
+                        for x in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if low_precision else None)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def lr_at(cfg: OptimizerConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics).
+
+    Mixed precision: when the model params are bf16 the update is applied to
+    the f32 master copy in `state.master` and the bf16 params are re-derived
+    (so the forward/backward all-gathers move half the bytes).
+    """
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        p32 = master if master is not None else p.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + cfg.weight_decay * p32
+        new32 = p32 - lr * delta
+        return new32.astype(p.dtype), m2, v2, (new32 if master is not None
+                                               else None)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_mast = (jax.tree.leaves(state.master) if state.master is not None
+                 else [None] * len(flat_p))
+    new = [upd(p, g, m, v, mw) for p, g, m, v, mw
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_mast)]
+    new_p = jax.tree.unflatten(treedef, [x[0] for x in new])
+    new_m = jax.tree.unflatten(treedef, [x[1] for x in new])
+    new_v = jax.tree.unflatten(treedef, [x[2] for x in new])
+    new_master = (jax.tree.unflatten(treedef, [x[3] for x in new])
+                  if state.master is not None else None)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step=step, m=new_m, v=new_v,
+                           master=new_master), metrics

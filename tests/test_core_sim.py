@@ -1,0 +1,191 @@
+"""Core LArTPC simulation tests: physics invariants + strategy equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet, depo_patch_origin, generate_depos
+from repro.core.fft_conv import digitize, fft_convolve
+from repro.core.noise import simulate_noise
+from repro.core.pipeline import simulate_fig3, simulate_fig4
+from repro.core.rasterize import rasterize, rasterize_one
+from repro.core.response import make_response
+from repro.core.scatter import scatter_sort_segment, scatter_xla
+
+CFG = LArTPCConfig(num_wires=64, num_ticks=256, num_depos=128,
+                   response_wires=11, response_ticks=48)
+
+
+def _depos(n=64, seed=0):
+    return generate_depos(jax.random.key(seed), CFG, n)
+
+
+class TestRasterize:
+    def test_mass_conservation(self):
+        """Patch integrals equal depo charge when the Gaussian fits inside."""
+        n = 32
+        depos = DepoSet(
+            wire=jnp.full((n,), 30.0) + jnp.arange(n) * 0.3,
+            tick=jnp.full((n,), 128.0),
+            sigma_w=jnp.full((n,), 1.0),
+            sigma_t=jnp.full((n,), 1.5),
+            charge=jnp.linspace(100.0, 5000.0, n),
+        )
+        patches, w0, t0 = rasterize(depos, CFG)
+        sums = np.asarray(patches.sum(axis=(1, 2)))
+        # 3-sigma truncation loses < 1.5% of the charge
+        np.testing.assert_allclose(sums, np.asarray(depos.charge), rtol=0.015)
+
+    def test_peak_at_center(self):
+        # centers at x.5 put the peak unambiguously in bin [x, x+1)
+        depos = DepoSet(wire=jnp.array([32.5]), tick=jnp.array([100.5]),
+                        sigma_w=jnp.array([0.8]), sigma_t=jnp.array([1.0]),
+                        charge=jnp.array([1000.0]))
+        patches, w0, t0 = rasterize(depos, CFG)
+        idx = np.unravel_index(np.argmax(np.asarray(patches[0])),
+                               patches[0].shape)
+        assert int(w0[0]) + idx[0] == 32
+        assert int(t0[0]) + idx[1] == 100
+
+    def test_batched_matches_single(self):
+        depos = _depos(16)
+        patches, w0, t0 = rasterize(depos, CFG)
+        for i in [0, 7, 15]:
+            single = rasterize_one(
+                depos.wire[i], depos.tick[i], depos.sigma_w[i],
+                depos.sigma_t[i], depos.charge[i],
+                w0[i].astype(jnp.float32), t0[i].astype(jnp.float32),
+                CFG.patch_wires, CFG.patch_ticks)
+            np.testing.assert_allclose(np.asarray(patches[i]),
+                                       np.asarray(single), rtol=1e-5,
+                                       atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(wire=st.floats(10, 50), tick=st.floats(30, 220),
+           sw=st.floats(0.3, 2.0), stt=st.floats(0.3, 2.0),
+           q=st.floats(1.0, 1e6))
+    def test_property_nonneg_and_bounded(self, wire, tick, sw, stt, q):
+        """Rasterized mass is non-negative and never exceeds the charge."""
+        depos = DepoSet(wire=jnp.array([wire], jnp.float32),
+                        tick=jnp.array([tick], jnp.float32),
+                        sigma_w=jnp.array([sw], jnp.float32),
+                        sigma_t=jnp.array([stt], jnp.float32),
+                        charge=jnp.array([q], jnp.float32))
+        patches, _, _ = rasterize(depos, CFG)
+        p = np.asarray(patches)
+        assert (p >= 0).all()
+        assert p.sum() <= q * 1.01
+
+
+class TestScatter:
+    def test_strategies_agree(self):
+        depos = _depos(128)
+        patches, w0, t0 = rasterize(depos, CFG)
+        g1 = scatter_xla(patches, w0, t0, CFG)
+        g2 = scatter_sort_segment(patches, w0, t0, CFG)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-2)
+
+    def test_total_charge_preserved(self):
+        depos = _depos(64)
+        patches, w0, t0 = rasterize(depos, CFG)
+        grid = scatter_xla(patches, w0, t0, CFG)
+        np.testing.assert_allclose(float(grid.sum()), float(patches.sum()),
+                                   rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), n=st.integers(1, 100))
+    def test_property_strategy_equivalence(self, seed, n):
+        depos = _depos(n, seed)
+        patches, w0, t0 = rasterize(depos, CFG)
+        g1 = scatter_xla(patches, w0, t0, CFG)
+        g2 = scatter_sort_segment(patches, w0, t0, CFG)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=5e-2)
+
+
+class TestFFTConv:
+    def test_matches_direct_convolution(self):
+        cfg = dataclasses.replace(CFG, num_wires=16, num_ticks=64,
+                                  response_wires=5, response_ticks=16)
+        resp = make_response(cfg)
+        rng = np.random.default_rng(0)
+        grid = jnp.asarray(rng.standard_normal((16, 64)).astype(np.float32))
+        out = np.asarray(fft_convolve(grid, resp))
+        # direct 2-D convolution: out[w+dw-rw//2, t+dt] += k[dw,dt]*g[w,t]
+        k = np.asarray(resp.kernel)
+        rw, rt = k.shape
+        ref = np.zeros((16, 64), np.float32)
+        g = np.asarray(grid)
+        for w in range(16):
+            for dw in range(rw):
+                wd = w + dw - rw // 2
+                if not 0 <= wd < 16:
+                    continue
+                for dt in range(rt):
+                    ref[wd, dt:] += k[dw, dt] * g[w, :64 - dt]
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+    def test_impulse_response_recovery(self):
+        """Convolving a unit impulse returns the kernel itself."""
+        resp = make_response(CFG)
+        grid = jnp.zeros((CFG.num_wires, CFG.num_ticks)).at[30, 50].set(1.0)
+        out = np.asarray(fft_convolve(grid, resp))
+        k = np.asarray(resp.kernel)
+        rw = k.shape[0]
+        got = out[30 - rw // 2:30 + rw // 2 + 1, 50:50 + k.shape[1]]
+        np.testing.assert_allclose(got, k, atol=1e-4)
+
+    def test_digitize_range(self):
+        sig = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (8, 32)).astype(np.float32)) * 1e6
+        adc = digitize(sig, CFG)
+        assert adc.dtype == jnp.int16
+        assert int(adc.min()) >= 0 and int(adc.max()) <= 4095
+
+
+class TestNoise:
+    def test_rms_calibrated(self):
+        noise = simulate_noise(jax.random.key(0), CFG)
+        rms = float(jnp.sqrt(jnp.mean(noise ** 2)))
+        assert 0.5 * CFG.noise_rms_adc < rms < 2.0 * CFG.noise_rms_adc, rms
+
+    def test_zero_mean(self):
+        noise = simulate_noise(jax.random.key(1), CFG)
+        assert abs(float(noise.mean())) < 0.1
+
+
+class TestPipelines:
+    def test_fig3_equals_fig4_no_rng(self):
+        """The naive per-depo pipeline and the batched pipeline agree exactly
+        when fluctuation is off (paper F1: same physics, different speed)."""
+        cfg = dataclasses.replace(CFG, fluctuate=False, num_depos=24)
+        depos = _depos(24)
+        resp = make_response(cfg)
+        key = jax.random.key(0)
+        out3 = simulate_fig3(key, depos, resp, cfg, add_noise=False)
+        out4 = simulate_fig4(key, depos, resp, cfg, add_noise=False)
+        np.testing.assert_allclose(np.asarray(out3.charge_grid),
+                                   np.asarray(out4.charge_grid),
+                                   rtol=1e-4, atol=1e-2)
+        assert (np.asarray(out3.adc) == np.asarray(out4.adc)).mean() > 0.999
+
+    def test_rng_strategies_same_statistics(self):
+        """counter vs pool fluctuation give statistically identical grids."""
+        depos = _depos(128)
+        resp = make_response(CFG)
+        cfg_c = dataclasses.replace(CFG, rng_strategy="counter")
+        cfg_p = dataclasses.replace(CFG, rng_strategy="pool")
+        from repro.core.fluctuate import make_pool
+        pool = make_pool(jax.random.key(9), 1 << 16)
+        out_c = simulate_fig4(jax.random.key(1), depos, resp, cfg_c,
+                              add_noise=False)
+        out_p = simulate_fig4(jax.random.key(2), depos, resp, cfg_p,
+                              pool=pool, add_noise=False)
+        tc = float(out_c.charge_grid.sum())
+        tp = float(out_p.charge_grid.sum())
+        assert abs(tc - tp) / tc < 0.02

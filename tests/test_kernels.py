@@ -1,0 +1,132 @@
+"""Pallas kernel tests: shape/dtype sweeps + allclose vs the ref.py oracles
+(interpret mode executes the kernel body on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import LArTPCConfig
+from repro.core.depo import depo_patch_origin, generate_depos
+from repro.core.rasterize import rasterize
+from repro.kernels.rasterize.kernel import rasterize_pallas
+from repro.kernels.rasterize.ops import _pad_depos, rasterize_depos
+from repro.kernels.rasterize.ref import rasterize_ref
+from repro.kernels.scatter_add.kernel import scatter_add_pallas
+from repro.kernels.scatter_add.ops import bin_depos_to_tiles, scatter_add_tiles
+from repro.kernels.scatter_add.ref import scatter_add_ref
+
+CFG = LArTPCConfig(num_wires=96, num_ticks=768, num_depos=128)
+
+
+def _setup(n=128, seed=0, cfg=CFG):
+    depos = generate_depos(jax.random.key(seed), cfg, n)
+    return depos
+
+
+class TestRasterizeKernel:
+    @pytest.mark.parametrize("pw,pt", [(20, 20), (12, 28), (8, 8), (24, 100)])
+    def test_shape_sweep(self, pw, pt):
+        cfg = dataclasses.replace(CFG, patch_wires=pw, patch_ticks=pt)
+        depos = _setup(cfg=cfg)
+        padded, n = _pad_depos(depos, 64)
+        w0, t0 = depo_patch_origin(padded, cfg)
+        pw_pad = (pw + 7) // 8 * 8
+        pt_pad = 128
+        shape = (padded.n, pw_pad, pt_pad)
+        u1 = jax.random.uniform(jax.random.key(1), shape)
+        u2 = jax.random.uniform(jax.random.key(2), shape)
+        args = (padded.wire, padded.tick, padded.sigma_w, padded.sigma_t,
+                padded.charge, w0, t0, u1, u2)
+        kw = dict(pw=pw, pt=pt, pw_pad=pw_pad, pt_pad=pt_pad)
+        out = rasterize_pallas(*args, depo_block=64, **kw)
+        ref = rasterize_ref(*args, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("depo_block", [32, 64, 256])
+    def test_block_size_sweep(self, depo_block):
+        depos = _setup(256)
+        p1, w0, t0 = rasterize_depos(jax.random.key(0), depos, CFG,
+                                     depo_block=depo_block, fluctuate=False)
+        ref, rw0, rt0 = rasterize(depos, CFG)
+        np.testing.assert_allclose(
+            np.asarray(p1[:, :CFG.patch_wires, :CFG.patch_ticks]),
+            np.asarray(ref), rtol=2e-5, atol=1e-3)
+        assert (np.asarray(w0) == np.asarray(rw0)).all()
+
+    def test_padding_is_zero(self):
+        depos = _setup(64)
+        patches, _, _ = rasterize_depos(jax.random.key(0), depos, CFG,
+                                        fluctuate=True)
+        p = np.asarray(patches)
+        assert (p[:, CFG.patch_wires:, :] == 0).all()
+        assert (p[:, :, CFG.patch_ticks:] == 0).all()
+
+    def test_fluctuation_statistics(self):
+        """Fluctuated mass has ~binomial variance (normal approximation)."""
+        n = 512
+        from repro.core.depo import DepoSet
+        depos = DepoSet(wire=jnp.full((n,), 40.0), tick=jnp.full((n,), 300.0),
+                        sigma_w=jnp.full((n,), 1.0),
+                        sigma_t=jnp.full((n,), 1.0),
+                        charge=jnp.full((n,), 10_000.0))
+        patches, _, _ = rasterize_depos(jax.random.key(3), depos, CFG,
+                                        fluctuate=True)
+        sums = np.asarray(patches.sum(axis=(1, 2)))
+        assert abs(sums.mean() - 10_000.0) < 50.0
+        assert 10.0 < sums.std() < 120.0  # nonzero but bounded
+
+
+class TestScatterKernel:
+    @pytest.mark.parametrize("tw,tt", [(32, 128), (64, 256), (128, 768)])
+    def test_tile_sweep(self, tw, tt):
+        depos = _setup(96)
+        patches, w0, t0 = rasterize_depos(jax.random.key(0), depos, CFG,
+                                          fluctuate=False)
+        out = scatter_add_tiles(patches, w0, t0, num_wires=CFG.num_wires,
+                                num_ticks=CFG.num_ticks, tw=tw, tt=tt)
+        ref = scatter_add_ref(patches, w0, t0, num_wires=CFG.num_wires,
+                              num_ticks=CFG.num_ticks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-2)
+
+    def test_binning_covers_all_depos(self):
+        depos = _setup(200)
+        patches, w0, t0 = rasterize_depos(jax.random.key(0), depos, CFG,
+                                          fluctuate=False)
+        n, pw_pad, pt_pad = patches.shape
+        ids, n_tiles = bin_depos_to_tiles(
+            w0, t0, pw_pad, pt_pad, CFG.num_wires, CFG.num_ticks,
+            tw=64, tt=256, k_max=256)
+        got = np.asarray(ids)
+        present = set(got[got >= 0].tolist())
+        assert present == set(range(n)), "every depo must land in >=1 tile"
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 99), n=st.integers(1, 64))
+    def test_property_kernel_equals_oracle(self, seed, n):
+        depos = _setup(n, seed)
+        patches, w0, t0 = rasterize_depos(jax.random.key(seed), depos, CFG,
+                                          fluctuate=False)
+        out = scatter_add_tiles(patches, w0, t0, num_wires=CFG.num_wires,
+                                num_ticks=CFG.num_ticks)
+        ref = scatter_add_ref(patches, w0, t0, num_wires=CFG.num_wires,
+                              num_ticks=CFG.num_ticks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-2)
+
+    def test_deterministic(self):
+        """Owner-computes accumulation is bitwise deterministic (vs atomics)."""
+        depos = _setup(128)
+        patches, w0, t0 = rasterize_depos(jax.random.key(0), depos, CFG,
+                                          fluctuate=False)
+        a = np.asarray(scatter_add_tiles(patches, w0, t0,
+                                         num_wires=CFG.num_wires,
+                                         num_ticks=CFG.num_ticks))
+        b = np.asarray(scatter_add_tiles(patches, w0, t0,
+                                         num_wires=CFG.num_wires,
+                                         num_ticks=CFG.num_ticks))
+        assert (a == b).all()
