@@ -1,10 +1,14 @@
-"""Benchmark utilities: timing, CSV emission."""
+"""Benchmark utilities: timing, CSV emission, JSON result files."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+#: every emit() appends here; write_json() snapshots it to a BENCH_*.json
+RECORDS: List[Dict] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
@@ -25,3 +29,13 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    RECORDS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": derived})
+
+
+def write_json(path: str) -> str:
+    """Write all records emitted so far to a BENCH_*.json file."""
+    with open(path, "w") as f:
+        json.dump({"records": RECORDS}, f, indent=2)
+        f.write("\n")
+    return path

@@ -1,22 +1,35 @@
-"""Fig. 3 vs Fig. 4 end-to-end pipeline comparison (the paper's headline).
+"""Fig. 3 vs Fig. 4 end-to-end pipeline comparison (the paper's headline),
+extended one level up with the multi-event batched engine.
 
-fig3: per-depo dispatch + host accumulation + device FFT at the end.
-fig4: one jit'd program for the whole event.
+fig3         : per-depo dispatch + host accumulation + device FFT at the end.
+fig4         : one jit'd program for the whole event.
+batched fig4 : one jit'd vmap program for E whole events (repro.core.batch) —
+               the fig3 -> fig4 -> batched-fig4 throughput trajectory.
+
+``python benchmarks/pipeline.py`` sweeps E on the smoke config and writes
+BENCH_pipeline.json; ``--full`` additionally sweeps the full
+MicroBooNE-scale config (expensive — minutes on CPU).
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import jax
+import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.config import LArTPCConfig
+from benchmarks.common import emit, time_fn, write_json
+from repro.config import LArTPCConfig, get_config
+from repro.core.batch import (event_keys, make_batched_sim_fn, pack_events,
+                              simulate_events)
 from repro.core.depo import generate_depos
 from repro.core.pipeline import simulate_fig3, simulate_fig4
 from repro.core.response import make_response
 
+BATCH_SIZES = (1, 2, 4, 8, 16)
 
-def main():
+
+def fig3_vs_fig4():
     cfg = LArTPCConfig(num_wires=512, num_ticks=2048, num_depos=1000)
     depos = generate_depos(jax.random.key(0), cfg)
     resp = make_response(cfg)
@@ -24,12 +37,14 @@ def main():
 
     t3 = time_fn(lambda: simulate_fig3(key, depos, resp, cfg).adc,
                  warmup=1, iters=1)
-    emit("pipeline/fig3_per_depo", t3, f"n={cfg.num_depos}")
+    emit("pipeline/fig3_per_depo", t3,
+         f"n={cfg.num_depos};depos_per_s={cfg.num_depos/t3:.3g}")
 
     fig4 = jax.jit(lambda k, d: simulate_fig4(k, d, resp, cfg).adc)
     t4 = time_fn(fig4, key, depos, iters=3)
     emit("pipeline/fig4_batched", t4,
-         f"n={cfg.num_depos};speedup={t3/t4:.0f}x")
+         f"n={cfg.num_depos};depos_per_s={cfg.num_depos/t4:.3g};"
+         f"speedup={t3/t4:.0f}x")
 
     # scatter strategy end-to-end effect
     for strat in ["xla", "sort_segment"]:
@@ -39,5 +54,59 @@ def main():
         emit(f"pipeline/fig4_scatter_{strat}", t, "")
 
 
+def event_batch_sweep(cfg: LArTPCConfig, tag: str,
+                      batch_sizes=BATCH_SIZES, iters: int = 3):
+    """Throughput of the vmap'd multi-event engine vs batch size E."""
+    resp = make_response(cfg)
+    key = jax.random.key(0)
+    e_max = max(batch_sizes)
+    events = [generate_depos(jax.random.fold_in(key, ev), cfg)
+              for ev in range(e_max)]
+    for e_sz in batch_sizes:
+        batch = pack_events(events[:e_sz])
+        keys = event_keys(key, range(e_sz))
+        sim = make_batched_sim_fn(cfg, resp=resp)
+        t = time_fn(lambda: sim(keys, batch).adc, iters=iters)
+        n = batch.total_depos
+        emit(f"pipeline/fig4_events_{tag}_E{e_sz}", t,
+             f"events={e_sz};depos={n};depos_per_s={n/t:.3g};"
+             f"events_per_s={e_sz/t:.3g}")
+
+
+def verify_batched_equals_loop(cfg: LArTPCConfig, e_sz: int = 4) -> bool:
+    """Batched engine == Python loop of per-event fig4, bit for bit."""
+    resp = make_response(cfg)
+    key = jax.random.key(2)
+    events = [generate_depos(jax.random.fold_in(key, ev), cfg)
+              for ev in range(e_sz)]
+    batch = pack_events(events)
+    keys = event_keys(key, range(e_sz))
+    out = simulate_events(keys, batch, resp, cfg)
+    ok = True
+    for e in range(e_sz):
+        ref = simulate_fig4(keys[e], batch.event(e), resp, cfg)
+        ok = ok and np.array_equal(np.asarray(out.adc[e]), np.asarray(ref.adc))
+    emit("pipeline/batched_equals_loop", 0.0, f"events={e_sz};match={ok}")
+    return ok
+
+
+def main(full: bool = False):
+    fig3_vs_fig4()
+    smoke = get_config("lartpc-uboone", smoke=True)
+    event_batch_sweep(smoke, "smoke")
+    if not verify_batched_equals_loop(smoke):
+        raise SystemExit(
+            "batched simulate_events diverged from the per-event fig4 loop")
+    if full:
+        event_batch_sweep(get_config("lartpc-uboone"), "full", iters=1)
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also sweep the full MicroBooNE-scale config")
+    ap.add_argument("--json", default="BENCH_pipeline.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(full=args.full)
+    print(f"wrote {write_json(args.json)}")

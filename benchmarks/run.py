@@ -16,6 +16,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import fft, lm_step, pipeline, rasterization, scatter
+    from benchmarks.common import write_json
 
     print("name,us_per_call,derived")
     for mod in [rasterization, scatter, pipeline, fft, lm_step]:
@@ -24,6 +25,8 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — keep the harness going
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
+
+    print(f"wrote {write_json('BENCH_all.json')}", file=sys.stderr)
 
     # roofline summary (reads cached dry-run artifacts; skipped if absent)
     try:

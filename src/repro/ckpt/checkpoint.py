@@ -22,7 +22,9 @@ import numpy as np
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists from jax 0.4.34 onward and was
+    # renamed from tree_util; go through tree_util for version portability
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(_path_str(p) for p in path)

@@ -7,6 +7,8 @@ Pipeline (paper Eq. 1/2):
 from repro.core.depo import DepoSet, generate_depos
 from repro.core.response import DetectorResponse, make_response
 from repro.core.pipeline import simulate, make_sim_fn
+from repro.core.batch import (EventBatch, event_keys, make_batched_sim_fn,
+                              pack_events, shard_events, simulate_events)
 
 __all__ = [
     "DepoSet",
@@ -15,4 +17,10 @@ __all__ = [
     "make_response",
     "simulate",
     "make_sim_fn",
+    "EventBatch",
+    "event_keys",
+    "pack_events",
+    "shard_events",
+    "simulate_events",
+    "make_batched_sim_fn",
 ]

@@ -58,6 +58,7 @@ ACT_RULES: Dict[str, AxisName] = {
     "state": None,
     # LArTPC sim
     "depos": ("pod", "data", "model"),
+    "events": ("pod", "data"),   # event axis of a multi-event batch (DP)
     "wires": "model",
     "ticks": None,
 }

@@ -104,7 +104,9 @@ print("RESULTS:" + json.dumps(results))
 def dist_results():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin children to CPU: with libtpu installed, an unset platform makes
+    # the child block on /tmp/libtpu_lockfile held by the pytest process
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=900,
                           cwd=os.path.dirname(os.path.dirname(__file__)))

@@ -66,7 +66,9 @@ print("RESULTS:" + json.dumps({"values_ok": ok, "sharded": sharded,
 def test_elastic_restore_onto_bigger_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin children to CPU: with libtpu installed, an unset platform makes
+    # the child block on /tmp/libtpu_lockfile held by the pytest process
+    env["JAX_PLATFORMS"] = "cpu"
     with tempfile.TemporaryDirectory() as d:
         env["CKPT_DIR"] = d
         cwd = os.path.dirname(os.path.dirname(__file__))
