@@ -15,7 +15,6 @@ prints the three roofline terms + temp memory so iterations are comparable.
 """
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
@@ -180,11 +179,9 @@ def run_lm_cell(arch_id: str, shape_name: str, variants):
 def run_sim_cell(variants):
     import jax.numpy as jnp
 
-    from repro.config import LArTPCConfig
     from repro.core.depo import DepoSet
     from repro.core.distributed import make_distributed_sim, padded_grid_shape
     from repro.core.response import make_distributed_response
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     cfg = get_config("lartpc-uboone")  # full MicroBooNE scale, 100k depos
     mesh = jax.make_mesh((16, 16), ("data", "model"))

@@ -4,7 +4,6 @@ roofline, not wall time)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.config import OptimizerConfig, ShapeConfig, get_config

@@ -15,7 +15,6 @@ Timings on this host's CPU; the *ratios* reproduce the paper's findings
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

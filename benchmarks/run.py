@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV lines. Mapping to the paper:
   scatter       -> Fig. 5 (scatter-add strategy scaling)
   pipeline      -> Fig. 3 vs Fig. 4 strategies (the headline comparison)
   fft           -> §5 "FT" stage
+  tune          -> per-backend strategy board (registry + autotuner winners)
   lm_step       -> host-framework sanity timings for the 10 assigned archs
   roofline      -> §Roofline report from the dry-run artifacts (if present)
 """
@@ -15,11 +16,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import fft, lm_step, pipeline, rasterization, scatter
+    from benchmarks import fft, lm_step, pipeline, rasterization, scatter, tune
     from benchmarks.common import write_json
 
     print("name,us_per_call,derived")
-    for mod in [rasterization, scatter, pipeline, fft, lm_step]:
+    for mod in [rasterization, scatter, pipeline, fft, tune, lm_step]:
         try:
             mod.main()
         except Exception:  # noqa: BLE001 — keep the harness going

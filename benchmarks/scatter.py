@@ -9,7 +9,6 @@ Throughput is reported as depos/second.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax

@@ -1,0 +1,59 @@
+"""Strategy-comparison sweep: time every registered candidate of every hot op.
+
+The paper compares scatter-add implementations per architecture by hand
+(Fig. 5, and the Kokkos/OpenMP/SYCL follow-ups flip the winner again); this
+module asks the kernel-strategy registry instead: for each hot op it times
+all *available* candidates on the live backend at the given config's shape,
+emits one record per (op, strategy), and records the tuner's decision —
+``python benchmarks/tune.py`` writes the board to ``BENCH_tune.json``.
+
+Candidates excluded by their availability predicate (e.g. Pallas interpret
+mode at production grid sizes off-TPU) are reported as ``excluded`` rows so
+the board never silently shrinks.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, time_fn, write_json
+from repro import tune
+from repro.config import get_config
+
+
+def sweep_op(op: str, cfg, tag: str, iters: int = 3,
+             sample_depos: int | None = None) -> None:
+    thunks = tune.candidate_thunks(op, cfg, sample_depos=sample_depos)
+    ctx = tune.make_context(cfg, tune.op_shape(op, cfg))
+    for name in sorted(tune.strategies(op)):
+        if name not in thunks:
+            emit(f"tune/{op}_{tag}_{name}", 0.0,
+                 f"excluded=availability_predicate;backend={ctx.backend}")
+            continue
+        t = time_fn(thunks[name], iters=iters)
+        emit(f"tune/{op}_{tag}_{name}", t, f"backend={ctx.backend}")
+    decision = tune.tune_op(op, cfg, sample_depos=sample_depos)
+    emit(f"tune/{op}_{tag}_winner", 0.0,
+         f"strategy={decision.strategy};source={decision.source}")
+
+
+def main(full: bool = False) -> None:
+    smoke = get_config("lartpc-uboone", smoke=True)
+    for op in tune.TUNABLE_OPS:
+        sweep_op(op, smoke, "smoke")
+    if full:
+        cfg = get_config("lartpc-uboone")
+        for op in tune.TUNABLE_OPS:
+            # cap the depo sample so the full-scale board stays minutes, not
+            # hours, on CPU; the shape bucket still reflects the true config
+            sweep_op(op, cfg, "full", iters=1, sample_depos=16384)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also sweep the full MicroBooNE-scale config")
+    ap.add_argument("--json", default="BENCH_tune.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(full=args.full)
+    print(f"wrote {write_json(args.json)}")

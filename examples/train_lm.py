@@ -9,7 +9,6 @@ on CPU it is slow — the default preset demonstrates the identical code path
 at toy scale.
 """
 import argparse
-import dataclasses
 
 from repro.config import (CheckpointConfig, ModelConfig, OptimizerConfig,
                           ShapeConfig, TrainConfig)

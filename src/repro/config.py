@@ -7,7 +7,7 @@ closed over by jit without retracing surprises.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
@@ -160,8 +160,15 @@ class LArTPCConfig:
     rng_strategy: str = "counter"  # counter | pool | none
     # xla: one scatter HLO (best single-device default);
     # sort_segment: sorted sequential-traffic form (TPU-oriented);
-    # pallas: owner-computes tile kernel
+    # pallas: owner-computes tile kernel;
+    # auto: resolve via the kernel-strategy registry / tuning cache
+    # (repro.tune — see docs/tuning.md)
     scatter_strategy: str = "xla"
+    # unfused: rasterize -> fluctuate -> scatter_add;
+    # fused_pallas: single rasterize+scatter kernel (no fluctuation); auto
+    charge_grid_strategy: str = "unfused"
+    # rfft2 | fft2 | auto — frequency-domain convolution layout
+    fft_strategy: str = "rfft2"
     pipeline: str = "fig4"         # fig3 | fig4
     # response
     response_ticks: int = 200

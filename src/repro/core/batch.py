@@ -170,7 +170,13 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
                         resp: Optional[DetectorResponse] = None,
                         add_noise: bool = True):
     """jit'd ``sim(keys, batch) -> SimOutput`` closure (batched production
-    path — the event-level analogue of ``make_sim_fn``)."""
+    path — the event-level analogue of ``make_sim_fn``).
+
+    ``"auto"`` strategy fields resolve here, before jit, so one fixed traced
+    program serves the whole stream (see ``repro.tune``)."""
+    from repro.tune import resolve_config
+
+    cfg = resolve_config(cfg)
     resp = resp if resp is not None else make_response(cfg)
     pool = None
     if cfg.rng_strategy == "pool":

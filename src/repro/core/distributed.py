@@ -25,8 +25,7 @@ Two scatter-reduction strategies for §Perf:
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import LArTPCConfig
 from repro.core import fluctuate as fl
-from repro.core.depo import DepoSet, depo_patch_origin
+from repro.core.depo import DepoSet
 from repro.core.fft_conv import digitize
 from repro.core.noise import noise_spectrum
 from repro.core.rasterize import rasterize

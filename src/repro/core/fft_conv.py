@@ -6,6 +6,15 @@ Zero-padding to the response's linear-convolution size avoids circular wrap
 (``make_response`` picks FFT-friendly padded sizes). On TPU the whole chain
 (pad → rfft2 → complex multiply → irfft2 → crop) fuses into one program —
 the paper's §5 "hand-write vendor FFT wrappers" problem is XLA's job here.
+
+Two layout strategies register as ``fft_convolve`` candidates in the
+kernel-strategy registry (``repro.tune``):
+
+  rfft2 : real-input FFT over the half-spectrum — half the frequency-domain
+          memory traffic; the natural choice when the backend's rfft is native.
+  fft2  : full complex FFT — same math (the full spectrum is reconstructed
+          from the stored half-spectrum via Hermitian symmetry); some
+          backends lower complex FFTs better than real ones.
 """
 from __future__ import annotations
 
@@ -14,16 +23,66 @@ import jax.numpy as jnp
 
 from repro.config import LArTPCConfig
 from repro.core.response import DetectorResponse
+from repro.tune.registry import register_strategy, set_default
 
 
-def fft_convolve(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
-    """Linear 2-D convolution of the charge grid with the detector response."""
+def _pad_grid(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
     w, t = grid.shape
     wp, tp = resp.pad_shape
-    padded = jnp.zeros((wp, tp), grid.dtype).at[:w, :t].set(grid)
-    freq = jnp.fft.rfft2(padded)
+    return jnp.zeros((wp, tp), grid.dtype).at[:w, :t].set(grid)
+
+
+@register_strategy("fft_convolve", "rfft2",
+                   note="real-input half-spectrum FFT")
+def fft_convolve_rfft2(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
+    w, t = grid.shape
+    wp, tp = resp.pad_shape
+    freq = jnp.fft.rfft2(_pad_grid(grid, resp))
     out = jnp.fft.irfft2(freq * resp.freq, s=(wp, tp))
     return out[:w, :t]
+
+
+def _full_spectrum(half: jax.Array, tp: int) -> jax.Array:
+    """Full complex spectrum of a real signal from its rfft2 half-spectrum.
+
+    Hermitian symmetry: F[k1, k2] = conj(F[-k1 mod W, tp - k2]).
+    """
+    wp = half.shape[0]
+    ncopy = tp - half.shape[1]
+    rows = (-jnp.arange(wp)) % wp
+    cols = ncopy - jnp.arange(ncopy)
+    tail = jnp.conj(half[rows][:, cols])
+    return jnp.concatenate([half, tail], axis=1)
+
+
+@register_strategy("fft_convolve", "fft2",
+                   note="full complex FFT; identical math, different layout")
+def fft_convolve_fft2(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
+    w, t = grid.shape
+    wp, tp = resp.pad_shape
+    freq = jnp.fft.fft2(_pad_grid(grid, resp).astype(jnp.complex64))
+    rfreq = _full_spectrum(resp.freq, tp)
+    out = jnp.real(jnp.fft.ifft2(freq * rfreq))
+    return out[:w, :t].astype(grid.dtype)
+
+
+set_default("fft_convolve", "rfft2")
+
+
+def fft_convolve(grid: jax.Array, resp: DetectorResponse,
+                 strategy: str | None = None) -> jax.Array:
+    """Linear 2-D convolution of the charge grid with the detector response."""
+    from repro.tune import autotune, registry
+
+    if strategy is None or strategy == "rfft2":
+        return fft_convolve_rfft2(grid, resp)
+    if strategy == "auto":
+        shape = {"num_wires": grid.shape[0], "num_ticks": grid.shape[1],
+                 "response_wires": resp.kernel.shape[0],
+                 "response_ticks": resp.kernel.shape[1]}
+        strategy = autotune.resolve("fft_convolve", None,
+                                    shape=shape).strategy
+    return registry.get_strategy("fft_convolve", strategy).fn(grid, resp)
 
 
 def digitize(signal: jax.Array, cfg: LArTPCConfig) -> jax.Array:

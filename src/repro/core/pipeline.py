@@ -11,10 +11,16 @@ Two strategies, mirroring the paper's Fig. 3 vs Fig. 4:
          fluctuate, scatter-add, FFT-convolve, add noise, digitize. One H2D
          (the depo arrays), one D2H (the ADC grid). The paper's proposed fix,
          implemented fully.
+
+The depos -> S(t,x) charge-grid stage is itself a registered hot op
+(``charge_grid`` in ``repro.tune``) with two candidates: the unfused
+rasterize -> fluctuate -> scatter chain, and the fused Pallas
+rasterize+scatter kernel (``repro.kernels.fused_sim``) in which patches
+never round-trip through HBM. ``make_sim_fn`` resolves any ``"auto"``
+strategy fields *before* jit so the traced program is fixed.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -29,6 +35,7 @@ from repro.core.noise import simulate_noise
 from repro.core.rasterize import rasterize, rasterize_one
 from repro.core.response import DetectorResponse, make_response
 from repro.core.scatter import scatter_add
+from repro.tune.registry import register_strategy, set_default
 
 
 class SimOutput(NamedTuple):
@@ -46,15 +53,74 @@ def _fluctuate(key, patches, charge, cfg: LArTPCConfig, pool=None):
     return fl.fluctuate_counter(key, patches, charge)
 
 
+# ---------------------------------------------------------------------------
+# Charge-grid strategies (depos -> S(t,x)) — the registry's second hot op
+# ---------------------------------------------------------------------------
+
+
+@register_strategy("charge_grid", "unfused",
+                   note="rasterize -> fluctuate -> scatter_add")
+def charge_grid_unfused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
+                        pool: Optional[jax.Array] = None) -> jax.Array:
+    patches, w0, t0 = rasterize(depos, cfg)
+    patches = _fluctuate(key, patches, depos.charge, cfg, pool)
+    return scatter_add(patches, w0, t0, cfg)
+
+
+def _fused_viable(ctx) -> bool:
+    # the fused kernel draws no fluctuation randomness, and off-TPU it runs
+    # in the Pallas interpreter — keep it out of the candidate set when the
+    # physics needs fluctuation or the grid is interpret-prohibitive
+    cfg = ctx.cfg
+    if cfg is None or (cfg.fluctuate and cfg.rng_strategy != "none"):
+        return False
+    if ctx.backend == "tpu":
+        return True
+    cells = ctx.shape.get("num_wires", 0) * ctx.shape.get("num_ticks", 0)
+    return cells <= (1 << 21)
+
+
+@register_strategy("charge_grid", "fused_pallas", available=_fused_viable,
+                   note="fused rasterize+scatter Pallas kernel (no RNG)")
+def charge_grid_fused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
+                      pool: Optional[jax.Array] = None) -> jax.Array:
+    from repro.kernels.fused_sim.ops import simulate_charge_grid
+
+    del key, pool  # the fused kernel is deterministic: no fluctuation stage
+    if cfg.fluctuate and cfg.rng_strategy != "none":
+        raise ValueError(
+            "charge_grid_strategy='fused_pallas' skips charge fluctuation; "
+            "set fluctuate=False or rng_strategy='none' (or use 'unfused')")
+    return simulate_charge_grid(depos, cfg)
+
+
+set_default("charge_grid", "unfused")
+
+
+def compute_charge_grid(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
+                        pool: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch depos -> S(t,x) through the registered strategy."""
+    from repro.tune import autotune, registry
+
+    strategy = cfg.charge_grid_strategy
+    if strategy == "auto":
+        strategy = autotune.resolve("charge_grid", cfg).strategy
+    return registry.get_strategy("charge_grid", strategy).fn(
+        key, depos, cfg, pool)
+
+
+# ---------------------------------------------------------------------------
+# Pipelines
+# ---------------------------------------------------------------------------
+
+
 def simulate_fig4(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
                   cfg: LArTPCConfig, pool: Optional[jax.Array] = None,
                   add_noise: bool = True) -> SimOutput:
     """The batched device-resident pipeline (paper Fig. 4). jit-able end to end."""
     kf, kn = jax.random.split(key)
-    patches, w0, t0 = rasterize(depos, cfg)
-    patches = _fluctuate(kf, patches, depos.charge, cfg, pool)
-    grid = scatter_add(patches, w0, t0, cfg)
-    signal = fft_convolve(grid, resp)
+    grid = compute_charge_grid(kf, depos, cfg, pool=pool)
+    signal = fft_convolve(grid, resp, cfg.fft_strategy)
     if add_noise:
         signal = signal + simulate_noise(kn, cfg) / jnp.maximum(
             cfg.adc_per_electron, 1e-30)
@@ -103,7 +169,7 @@ def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
                                w0s_h[i], t0s_h[i], normals))  # D2H per depo
         host_grid[w0s_h[i]:w0s_h[i] + pw, t0s_h[i]:t0s_h[i] + pt] += patch
     grid = jnp.asarray(host_grid)  # final H2D
-    signal = fft_convolve(grid, resp)
+    signal = fft_convolve(grid, resp, cfg.fft_strategy)
     if add_noise:
         signal = signal + simulate_noise(jax.random.fold_in(key, 1), cfg) / max(
             cfg.adc_per_electron, 1e-30)
@@ -112,7 +178,14 @@ def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
 
 def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
                 add_noise: bool = True):
-    """Return a jit'd fig4 simulate(key, depos) closure (the production path)."""
+    """Return a jit'd fig4 simulate(key, depos) closure (the production path).
+
+    Any ``"auto"`` strategy fields resolve (tuning cache / backend default)
+    here, before jit, so the traced program is fixed.
+    """
+    from repro.tune import resolve_config
+
+    cfg = resolve_config(cfg)
     resp = resp if resp is not None else make_response(cfg)
     pool = None
     if cfg.rng_strategy == "pool":
@@ -128,6 +201,9 @@ def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
 def simulate(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
              resp: Optional[DetectorResponse] = None, add_noise: bool = True,
              **kw) -> SimOutput:
+    from repro.tune import resolve_config
+
+    cfg = resolve_config(cfg)
     resp = resp if resp is not None else make_response(cfg)
     if cfg.pipeline == "fig3":
         return simulate_fig3(key, depos, resp, cfg, add_noise=add_noise, **kw)

@@ -16,7 +16,9 @@ no device atomics; we implement three deterministic TPU-native strategies:
                  bitwise deterministic (atomics are not).
 
 All strategies produce identical results (up to float addition order for
-`xla`), asserted in tests.
+`xla`), asserted in tests. Each registers itself as a ``scatter_add``
+candidate in the kernel-strategy registry (``repro.tune``); set
+``cfg.scatter_strategy="auto"`` to pick per backend from the tuning cache.
 """
 from __future__ import annotations
 
@@ -24,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import LArTPCConfig
+from repro.kernels import default_interpret
+from repro.tune.registry import register_strategy, set_default
 
 
 def _flat_pixel_indices(w0: jax.Array, t0: jax.Array, pw: int, pt: int, num_ticks: int):
@@ -33,6 +37,7 @@ def _flat_pixel_indices(w0: jax.Array, t0: jax.Array, pw: int, pt: int, num_tick
     return (w0[:, None, None] + dw) * num_ticks + (t0[:, None, None] + dt)
 
 
+@register_strategy("scatter_add", "xla", note="one scatter-add HLO")
 def scatter_xla(patches: jax.Array, w0: jax.Array, t0: jax.Array, cfg: LArTPCConfig):
     n, pw, pt = patches.shape
     idx = _flat_pixel_indices(w0, t0, pw, pt, cfg.num_ticks).reshape(-1)
@@ -41,6 +46,8 @@ def scatter_xla(patches: jax.Array, w0: jax.Array, t0: jax.Array, cfg: LArTPCCon
     return grid.reshape(cfg.num_wires, cfg.num_ticks)
 
 
+@register_strategy("scatter_add", "sort_segment",
+                   note="sort by destination, segment-sum, sorted scatter")
 def scatter_sort_segment(patches: jax.Array, w0: jax.Array, t0: jax.Array,
                          cfg: LArTPCConfig):
     n, pw, pt = patches.shape
@@ -67,16 +74,33 @@ def scatter_sort_segment(patches: jax.Array, w0: jax.Array, t0: jax.Array,
     return grid.reshape(cfg.num_wires, cfg.num_ticks)
 
 
+def _pallas_viable(ctx) -> bool:
+    # Compiled on TPU; anywhere else the kernel runs in the Pallas
+    # interpreter, which is a correctness tool — keep it out of the tuner's
+    # candidate set once the grid is big enough that interpret-mode tile
+    # loops dominate (it would never win, only slow tuning down).
+    if ctx.backend == "tpu":
+        return True
+    cells = ctx.shape.get("num_wires", 0) * ctx.shape.get("num_ticks", 0)
+    return cells <= (1 << 21)
+
+
+@register_strategy("scatter_add", "pallas", available=_pallas_viable,
+                   note="owner-computes tile kernel; interpret off-TPU")
 def scatter_pallas(patches: jax.Array, w0: jax.Array, t0: jax.Array,
-                   cfg: LArTPCConfig, interpret: bool = True):
+                   cfg: LArTPCConfig, interpret: bool | None = None):
     from repro.kernels.scatter_add.ops import scatter_add_tiles
 
     return scatter_add_tiles(
         patches, w0, t0,
-        num_wires=cfg.num_wires, num_ticks=cfg.num_ticks, interpret=interpret,
+        num_wires=cfg.num_wires, num_ticks=cfg.num_ticks,
+        interpret=default_interpret() if interpret is None else interpret,
     )
 
 
+set_default("scatter_add", "xla")
+
+#: name -> fn view of the registered candidates (back-compat surface)
 STRATEGIES = {
     "xla": scatter_xla,
     "sort_segment": scatter_sort_segment,
@@ -85,5 +109,18 @@ STRATEGIES = {
 
 
 def scatter_add(patches, w0, t0, cfg: LArTPCConfig, strategy: str | None = None):
+    """Dispatch to a scatter strategy.
+
+    ``strategy`` (or ``cfg.scatter_strategy``) may be a concrete name or
+    ``"auto"``: auto resolves through the tuning cache / backend default at
+    trace time, so the traced program is fixed (see ``repro.tune``).
+    """
+    from repro.tune import autotune, registry
+
     strategy = strategy or cfg.scatter_strategy
-    return STRATEGIES[strategy](patches, w0, t0, cfg)
+    if strategy == "auto":
+        shape = autotune.op_shape("scatter_add", cfg)
+        shape["num_depos"] = int(patches.shape[0])
+        strategy = autotune.resolve("scatter_add", cfg, shape=shape).strategy
+    return registry.get_strategy("scatter_add", strategy).fn(
+        patches, w0, t0, cfg)

@@ -1,3 +1,15 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def default_interpret(backend: str | None = None) -> bool:
+    """Pallas ``interpret`` default for the current (or given) backend.
+
+    Compiled with Mosaic on TPU; the portable interpreter everywhere else —
+    the registry's strategy fns use this so a Pallas candidate is runnable on
+    any backend without per-call-site flags.
+    """
+    import jax
+
+    return (backend or jax.default_backend()) != "tpu"

@@ -4,10 +4,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import LArTPCConfig
 from repro.core.depo import DepoSet, depo_patch_origin
+from repro.kernels import default_interpret
 from repro.kernels.fused_sim.kernel import fused_rasterize_scatter
 from repro.kernels.scatter_add.ops import bin_depos_to_tiles
 
@@ -16,8 +16,13 @@ from repro.kernels.scatter_add.ops import bin_depos_to_tiles
                                              "interpret"))
 def simulate_charge_grid(depos: DepoSet, cfg: LArTPCConfig, tw: int = 64,
                          tt: int = 256, k_max: int = 0,
-                         interpret: bool = True):
-    """Fused depos -> S(t, x) charge grid (no fluctuation; see kernel doc)."""
+                         interpret: bool | None = None):
+    """Fused depos -> S(t, x) charge grid (no fluctuation; see kernel doc).
+
+    ``interpret=None`` auto-selects by backend: Mosaic-compiled on TPU, the
+    portable Pallas interpreter elsewhere (``repro.kernels.default_interpret``).
+    """
+    interpret = default_interpret() if interpret is None else interpret
     w0, t0 = depo_patch_origin(depos, cfg)
     n = depos.n
     if k_max == 0:

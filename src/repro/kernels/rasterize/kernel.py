@@ -90,7 +90,9 @@ def rasterize_pallas(wire, tick, sigma_w, sigma_t, charge, w0, t0, u1, u2, *,
     assert n % depo_block == 0, f"pad depo count {n} to a multiple of {depo_block}"
     grid = (n // depo_block,)
 
-    col = lambda x: x.astype(jnp.float32).reshape(n, 1)
+    def col(x):
+        return x.astype(jnp.float32).reshape(n, 1)
+
     scalar_spec = pl.BlockSpec((depo_block, 1), lambda i: (i, 0))
     pool_spec = pl.BlockSpec((depo_block, pw_pad, pt_pad), lambda i: (i, 0, 0))
 

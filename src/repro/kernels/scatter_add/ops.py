@@ -62,11 +62,15 @@ def bin_depos_to_tiles(w0, t0, pw_pad: int, pt_pad: int, num_wires: int,
                                              "tt", "k_max", "interpret"))
 def scatter_add_tiles(patches, w0, t0, *, num_wires: int, num_ticks: int,
                       tw: int = 64, tt: int = 256, k_max: int = 0,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """Full owner-computes scatter-add: bin then accumulate.
 
-    Returns (num_wires, num_ticks) f32 grid.
+    ``interpret=None`` auto-selects by backend (compiled on TPU, interpreter
+    elsewhere). Returns (num_wires, num_ticks) f32 grid.
     """
+    from repro.kernels import default_interpret
+
+    interpret = default_interpret() if interpret is None else interpret
     n, pw_pad, pt_pad = patches.shape
     tw = max(tw, pw_pad)
     tt = max(tt, pt_pad)

@@ -18,7 +18,12 @@ from repro.serve.engine import Request, ServeEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(list_archs()))
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so the default-on flag is actually switchable:
+    # --no-smoke selects the full-size config (the old action="store_true"
+    # with default=True made the flag a no-op)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the smoke-scale config (--no-smoke for full)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)

@@ -1,7 +1,14 @@
 """LArTPC simulation launcher (the paper's workload):
 
     python -m repro.launch.sim [--smoke] [--events N] [--batch-events E]
-                               [--pipeline fig3|fig4] [--set key=value ...]
+                               [--pipeline fig3|fig4] [--tune] [--retune]
+                               [--strategy <scatter>] [--set key=value ...]
+
+``--tune`` autotunes every registered hot op (scatter-add, charge-grid,
+FFT-convolve) on the live backend at this config's shape before running,
+caching winners to disk; a repeated run reports cache hits instead of
+re-measuring (see docs/tuning.md). ``--strategy`` forces the scatter-add
+strategy, overriding both the config and the tuner.
 
 The fig4 path streams *batches* of events through one vmap'd device program
 (``repro.core.batch``): while batch b computes on device, the host generates
@@ -118,6 +125,14 @@ def main():
                     help="events per device launch (vmap batch size E)")
     ap.add_argument("--depos", type=int, default=0)
     ap.add_argument("--pipeline", choices=["fig3", "fig4"], default=None)
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune kernel strategies for this config/backend "
+                         "(cached; repeated runs report a cache hit)")
+    ap.add_argument("--retune", action="store_true",
+                    help="with --tune: ignore the cache and re-measure")
+    ap.add_argument("--strategy", default=None,
+                    help="force the scatter-add strategy (see repro.tune; "
+                         "'auto' resolves via the tuning cache)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
@@ -129,6 +144,22 @@ def main():
         cfg = apply_overrides(cfg, {"pipeline": args.pipeline})
     if args.set:
         cfg = apply_overrides(cfg, dict(kv.split("=", 1) for kv in args.set))
+
+    if args.tune:
+        from repro.tune import resolve_config_with_decisions
+
+        cfg, decisions = resolve_config_with_decisions(
+            cfg, tune=True, force=args.retune, tune_explicit=True)
+        for d in decisions:
+            print(d.describe())
+    if args.strategy:
+        from repro.tune import strategies
+
+        known = sorted(strategies("scatter_add")) + ["auto"]
+        if args.strategy not in known:
+            raise SystemExit(f"unknown --strategy {args.strategy!r}; "
+                             f"known: {known}")
+        cfg = apply_overrides(cfg, {"scatter_strategy": args.strategy})
 
     if cfg.pipeline == "fig3":
         _run_fig3(cfg, args.events, args.seed)

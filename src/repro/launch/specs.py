@@ -5,15 +5,14 @@ stand-ins (weak-type-correct, shardable).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import (ModelConfig, OptimizerConfig, ParallelConfig,
-                          ShapeConfig, SHAPES)
+                          ShapeConfig)
 from repro.models.model import Model
 from repro.models.transformer import init_caches
 from repro.optim.adamw import OptState

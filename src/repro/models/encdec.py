@@ -7,7 +7,7 @@ stack on top of them.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +16,7 @@ from repro.config import ModelConfig
 from repro.models import attention as attn
 from repro.models import layers as L
 from repro.models.transformer import (Stack, apply_block, build_params,
-                                      init_caches, make_block, run_stacks,
-                                      stacks_for)
+                                      make_block, stacks_for)
 
 
 def _enc_stack(cfg: ModelConfig) -> Stack:

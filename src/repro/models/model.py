@@ -12,17 +12,15 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import params as P
-from repro.models.encdec import build_encdec_params, encdec_forward, encode
-from repro.models.transformer import (build_params, init_caches, lm_forward,
-                                      stacks_for)
+from repro.models.encdec import build_encdec_params, encdec_forward
+from repro.models.transformer import build_params, init_caches, lm_forward
 
 
 class Model:

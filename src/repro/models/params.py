@@ -13,7 +13,7 @@ agreement between the three trees.
 from __future__ import annotations
 
 import hashlib
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

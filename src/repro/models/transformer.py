@@ -10,10 +10,9 @@ separate stacks or grouped layers.
 """
 from __future__ import annotations
 
-import functools
 
 from jax.ad_checkpoint import checkpoint_name
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,6 @@ from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
-from repro.parallel.sharding import logical
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,

@@ -7,15 +7,13 @@ single jit'd programs (Fig. 4 rule: one dispatch per step).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
 from repro.models.model import Model
 
 

@@ -8,14 +8,13 @@ error-feedback compression for the pod axis lives in
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, OptimizerConfig, ParallelConfig
-from repro.models.model import Model, chunked_lm_loss, lm_loss
+from repro.config import OptimizerConfig, ParallelConfig
+from repro.models.model import Model, chunked_lm_loss
 from repro.optim.adamw import OptState, adamw_update
 
 

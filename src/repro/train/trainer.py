@@ -13,10 +13,9 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.config import TrainConfig

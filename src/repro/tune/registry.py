@@ -1,0 +1,162 @@
+"""Kernel-strategy registry: one table of candidate implementations per hot op.
+
+The source paper's central portability lesson is that the *best* implementation
+of a hot spot differs by backend — its Kokkos port had to choose between
+atomic, sort-segment, and tiled scatter-add strategies per architecture, and
+the follow-up OpenMP/SYCL ports flip the winner again. The seed repo carried
+that choice as scattered per-op ``if/else`` on config strings. This module
+replaces it with a single registry:
+
+  * each hot op (``scatter_add``, ``charge_grid``, ``fft_convolve``) registers
+    its candidate implementations under a name, with a declared availability
+    predicate (some candidates only make sense on some backends / shapes);
+  * per-op, per-backend *heuristic* defaults live in one table instead of
+    being implied by call sites;
+  * the empirical autotuner (``repro.tune.autotune``) walks the same table to
+    time candidates on the live backend and cache the winner.
+
+The registry is deliberately dependency-light (jax only for backend
+introspection, no config import): implementations register themselves from
+the modules that own them, and ``ensure_registered`` imports those modules
+lazily to avoid cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneContext:
+    """Everything an availability predicate may inspect.
+
+    cfg        : the workload config (``LArTPCConfig`` for the sim ops).
+    backend    : jax platform name ("cpu" | "gpu" | "tpu").
+    device_kind: e.g. "TPU v4", "cpu" — part of the tuning-cache key.
+    shape      : problem dims the op cares about (num_depos, grid dims, ...).
+    """
+
+    cfg: Any
+    backend: str
+    device_kind: str
+    shape: Mapping[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One registered candidate implementation of a hot op."""
+
+    op: str
+    name: str
+    fn: Callable
+    available: Optional[Callable[[TuneContext], bool]] = None
+    note: str = ""
+
+    def is_available(self, ctx: TuneContext) -> bool:
+        return self.available is None or bool(self.available(ctx))
+
+
+_OPS: Dict[str, Dict[str, Strategy]] = {}
+_DEFAULTS: Dict[str, Dict[str, str]] = {}  # op -> {backend or "*": name}
+_ENSURED = False
+
+
+def register_strategy(
+    op: str,
+    name: str,
+    *,
+    available: Optional[Callable[[TuneContext], bool]] = None,
+    note: str = "",
+):
+    """Decorator: register ``fn`` as candidate ``name`` of hot op ``op``."""
+
+    def deco(fn):
+        _OPS.setdefault(op, {})[name] = Strategy(op, name, fn, available, note)
+        return fn
+
+    return deco
+
+
+def set_default(op: str, name: str, backend: str = "*") -> None:
+    """Declare the heuristic default strategy for ``op`` on ``backend``
+    ("*" = any backend without a more specific entry)."""
+    _DEFAULTS.setdefault(op, {})[backend] = name
+
+
+def ensure_registered() -> None:
+    """Import every module that registers strategies (idempotent).
+
+    Mirrors ``repro.config.get_config`` importing ``repro.configs``: the
+    registry stays dependency-free and the owning modules self-register.
+    """
+    global _ENSURED
+    if _ENSURED:
+        return
+    _ENSURED = True
+    import repro.core.fft_conv  # noqa: F401  registers fft_convolve/*
+    import repro.core.pipeline  # noqa: F401  registers charge_grid/*
+    import repro.core.scatter  # noqa: F401  registers scatter_add/*
+
+
+def list_ops() -> list:
+    ensure_registered()
+    return sorted(_OPS)
+
+
+def strategies(op: str) -> Dict[str, Strategy]:
+    """All registered candidates of ``op`` (name -> Strategy)."""
+    ensure_registered()
+    if op not in _OPS:
+        raise KeyError(f"unknown hot op {op!r}; known: {sorted(_OPS)}")
+    return dict(_OPS[op])
+
+
+def get_strategy(op: str, name: str) -> Strategy:
+    table = strategies(op)
+    if name not in table:
+        raise KeyError(
+            f"unknown strategy {name!r} for op {op!r}; known: {sorted(table)}"
+        )
+    return table[name]
+
+
+def available_strategies(op: str, ctx: TuneContext) -> Dict[str, Strategy]:
+    """Candidates of ``op`` whose availability predicate passes for ``ctx``."""
+    return {n: s for n, s in strategies(op).items() if s.is_available(ctx)}
+
+
+def default_strategy(op: str, backend: Optional[str] = None) -> str:
+    """The heuristic (non-tuned) default for ``op`` on ``backend``."""
+    ensure_registered()
+    backend = backend or current_backend()
+    table = _DEFAULTS.get(op, {})
+    if backend in table:
+        return table[backend]
+    if "*" in table:
+        return table["*"]
+    raise KeyError(f"no default strategy declared for op {op!r}")
+
+
+def current_backend() -> str:
+    return jax.default_backend()
+
+
+def current_device_kind() -> str:
+    kind = jax.devices()[0].device_kind
+    return kind.replace(" ", "_")
+
+
+def make_context(
+    cfg,
+    shape: Mapping[str, int],
+    backend: Optional[str] = None,
+) -> TuneContext:
+    return TuneContext(
+        cfg=cfg,
+        backend=backend or current_backend(),
+        device_kind=current_device_kind(),
+        shape=dict(shape),
+    )

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import SHAPES, ShapeConfig, OptimizerConfig, get_config
+from repro.config import ShapeConfig, OptimizerConfig, get_config
 from repro.configs import ARCH_IDS
 from repro.data.tokens import make_batch, shard_batch
 from repro.models.model import Model

@@ -10,7 +10,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import LArTPCConfig
-from repro.core.depo import DepoSet, depo_patch_origin, generate_depos
+from repro.core.depo import DepoSet, generate_depos
 from repro.core.fft_conv import digitize, fft_convolve
 from repro.core.noise import simulate_noise
 from repro.core.pipeline import simulate_fig3, simulate_fig4

@@ -6,7 +6,6 @@ import subprocess
 import sys
 import tempfile
 
-import pytest
 
 SCRIPT_SAVE = r"""
 import os, json

@@ -1,5 +1,4 @@
 """Fused rasterize+scatter kernel vs the unfused oracle."""
-import dataclasses
 
 import jax
 import numpy as np

@@ -16,7 +16,6 @@ from repro.core.rasterize import rasterize
 from repro.kernels.rasterize.kernel import rasterize_pallas
 from repro.kernels.rasterize.ops import _pad_depos, rasterize_depos
 from repro.kernels.rasterize.ref import rasterize_ref
-from repro.kernels.scatter_add.kernel import scatter_add_pallas
 from repro.kernels.scatter_add.ops import bin_depos_to_tiles, scatter_add_tiles
 from repro.kernels.scatter_add.ref import scatter_add_ref
 

@@ -7,10 +7,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.config import ModelConfig, MoEConfig, SSMConfig, RGLRUConfig
+from repro.config import ModelConfig, MoEConfig
 from repro.models.attention import _direct_attention, flash_attention
 from repro.models.moe import apply_moe, make_moe
-from repro.models.params import init_params, param_names, param_shapes
+from repro.models.params import init_params
 from repro.models.rglru import _lru_scan
 from repro.models.ssm import ssd_chunked, ssd_decode_step
 

@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LArTPCConfig, get_config
-from repro.core import generate_depos, make_response, make_sim_fn, simulate
+from repro.config import get_config
+from repro.core import generate_depos, make_sim_fn, simulate
 
 CFG = get_config("lartpc-uboone", smoke=True)
 

@@ -1,9 +1,7 @@
 """Fault-tolerance integration tests: train, checkpoint, kill, resume."""
 import dataclasses
 
-import jax
 import numpy as np
-import pytest
 
 from repro.config import (CheckpointConfig, ModelConfig, OptimizerConfig,
                           ShapeConfig, TrainConfig)
