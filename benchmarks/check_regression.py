@@ -1,0 +1,79 @@
+"""Bench regression gate: diff a fresh BENCH_*.json against the committed
+baseline and fail on a large slowdown of a named record.
+
+CI runs the pipeline benchmark into a scratch file and compares it to the
+repo's committed ``BENCH_pipeline.json``:
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_pipeline.json --fresh BENCH_pipeline_fresh.json \
+        --record pipeline/fig4_batched --max-ratio 2.0
+
+Exit status 1 (with a diff table) when fresh/baseline exceeds the ratio for
+any watched record; records missing from the fresh run also fail (a silently
+vanished benchmark is a regression too). Records missing from the *baseline*
+only warn — new benchmarks land before their baseline numbers do.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data["records"]}
+
+
+def check(baseline_path: str, fresh_path: str, records: list,
+          max_ratio: float) -> int:
+    baseline = load_records(baseline_path)
+    fresh = load_records(fresh_path)
+    failed = False
+    print(f"{'record':<40} {'baseline_us':>12} {'fresh_us':>12} {'ratio':>7}")
+    for name in records:
+        if name not in baseline:
+            print(f"{name:<40} {'(new)':>12} "
+                  f"{fresh.get(name, float('nan')):>12.1f} {'--':>7}")
+            continue
+        if name not in fresh:
+            print(f"{name:<40} {baseline[name]:>12.1f} {'MISSING':>12} "
+                  f"{'--':>7}  FAIL")
+            failed = True
+            continue
+        ratio = fresh[name] / baseline[name] if baseline[name] > 0 else 0.0
+        verdict = "FAIL" if ratio > max_ratio else "ok"
+        print(f"{name:<40} {baseline[name]:>12.1f} {fresh[name]:>12.1f} "
+              f"{ratio:>6.2f}x  {verdict}")
+        failed = failed or ratio > max_ratio
+    if failed:
+        print(f"\nregression: ratio exceeded {max_ratio:.1f}x "
+              f"(or a watched record vanished)", file=sys.stderr)
+    return 1 if failed else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json to compare against")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--record", action="append", required=True,
+                    help="record name to gate (repeatable)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when fresh/baseline exceeds this (default 2x)")
+    args = ap.parse_args()
+    if not os.path.exists(args.baseline):
+        # a branch without a committed baseline shouldn't hard-fail the
+        # bench job — the gate simply has nothing to compare against yet.
+        # (a missing FRESH file still fails loudly: the benchmark broke.)
+        print(f"warning: no baseline {args.baseline!r} to gate against; "
+              "skipping", file=sys.stderr)
+        return 0
+    return check(args.baseline, args.fresh, args.record, args.max_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

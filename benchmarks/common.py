@@ -39,3 +39,116 @@ def write_json(path: str) -> str:
         json.dump({"records": RECORDS}, f, indent=2)
         f.write("\n")
     return path
+
+
+def run_occupancy_board(prefix: str, *, fluctuate: bool,
+                        include_scatter: bool = False,
+                        include_unfused: bool = False,
+                        iters: int = 2) -> None:
+    """Dense-grid vs active-tile-compacted kernels on a track-like depo set
+    (most readout tiles empty) and a diffuse one (nearly all tiles hit).
+
+    Kernel work is (launch tiles x k_max) grid steps: the compacted variants
+    should win roughly n_tiles/n_active_bucket on the track set and tie on
+    the diffuse set — the ISSUE-3 sparsity evidence. Shared by
+    ``benchmarks/tune.py`` (kernel-level board, fluctuation off, plus the
+    owner-computes scatter kernels) and ``benchmarks/pipeline.py``
+    (charge-grid stage with the physics-default fluctuation, plus the
+    unfused reference row); one definition so the boards cannot drift.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import LArTPCConfig
+    from repro.core.depo import depo_patch_origin, generate_depos
+    from repro.core.pipeline import charge_grid_unfused
+    from repro.core.rasterize import rasterize
+    from repro.kernels.fused_sim.ops import (simulate_charge_grid,
+                                             simulate_charge_grid_compact)
+    from repro.kernels.scatter_add.ops import (count_active_tiles, next_pow2,
+                                               scatter_add_tiles,
+                                               scatter_add_tiles_compact)
+
+    cfg = LArTPCConfig(num_wires=256, num_ticks=1024, num_depos=64,
+                       fluctuate=fluctuate, response_wires=11,
+                       response_ticks=64)
+    tw, tt = 32, 128
+    n_tiles = (cfg.num_wires // tw) * (cfg.num_ticks // tt)
+    k_max = 256  # generous: no per-tile overflow even for the dense track
+    key = jax.random.key(3) if fluctuate else None  # in-kernel RNG on/off
+    depo_sets = {
+        "track": generate_depos(jax.random.key(5), cfg),   # one dense track
+        "diffuse": diffuse_depos(cfg, cfg.num_depos, seed=6),
+    }
+    unfused = jax.jit(lambda k, d: charge_grid_unfused(k, d, cfg))
+    for tag, depos in depo_sets.items():
+        w0, t0 = depo_patch_origin(depos, cfg)
+        n_act = int(count_active_tiles(
+            w0, t0, pw_pad=cfg.patch_wires, pt_pad=cfg.patch_ticks,
+            num_wires=cfg.num_wires, num_ticks=cfg.num_ticks, tw=tw, tt=tt))
+        occ = (f"n_active={n_act};n_cap={min(n_tiles, next_pow2(n_act))};"
+               f"n_tiles={n_tiles};fluctuate={fluctuate}")
+        if include_unfused:
+            emit(f"{prefix}occupancy_{tag}_unfused",
+                 time_fn(unfused, jax.random.key(3), depos, iters=iters), occ)
+        dense = functools.partial(simulate_charge_grid, depos, cfg,
+                                  tw=tw, tt=tt, k_max=k_max, key=key)
+        compact = functools.partial(simulate_charge_grid_compact, depos, cfg,
+                                    tw=tw, tt=tt, k_max=k_max, key=key)
+        emit(f"{prefix}occupancy_{tag}_fused_dense",
+             time_fn(dense, iters=iters), occ)
+        emit(f"{prefix}occupancy_{tag}_fused_compact",
+             time_fn(compact, iters=iters), occ)
+        if not include_scatter:
+            continue
+        # owner-computes scatter-add over pre-rasterized (padded) patches;
+        # these kernels bin by the PADDED extent, so their occupancy (and
+        # the compact win) is measured with pad_wires/pad_ticks — annotating
+        # them with the raw-patch occupancy above would overstate the win
+        n_act_pad = int(count_active_tiles(
+            w0, t0, pw_pad=cfg.pad_wires, pt_pad=cfg.pad_ticks,
+            num_wires=cfg.num_wires, num_ticks=cfg.num_ticks, tw=tw, tt=tt))
+        occ_pad = (f"n_active={n_act_pad};"
+                   f"n_cap={min(n_tiles, next_pow2(n_act_pad))};"
+                   f"n_tiles={n_tiles};fluctuate={fluctuate}")
+        patches, _, _ = rasterize(depos, cfg)
+        pad = jnp.zeros(
+            (depos.n, cfg.pad_wires, cfg.pad_ticks), patches.dtype
+        ).at[:, :cfg.patch_wires, :cfg.patch_ticks].set(patches)
+        sdense = functools.partial(
+            scatter_add_tiles, pad, w0, t0, num_wires=cfg.num_wires,
+            num_ticks=cfg.num_ticks, tw=tw, tt=tt, k_max=k_max)
+        scompact = functools.partial(
+            scatter_add_tiles_compact, pad, w0, t0, num_wires=cfg.num_wires,
+            num_ticks=cfg.num_ticks, tw=tw, tt=tt, k_max=k_max)
+        emit(f"{prefix}occupancy_{tag}_scatter_dense",
+             time_fn(sdense, iters=iters), occ_pad)
+        emit(f"{prefix}occupancy_{tag}_scatter_compact",
+             time_fn(scompact, iters=iters), occ_pad)
+
+
+def diffuse_depos(cfg, n: int, seed: int = 0):
+    """Depos spread uniformly over the whole readout plane.
+
+    The occupancy-sweep counterpart of ``generate_depos`` (whose track-like
+    output concentrates charge in few readout tiles): diffuse depos touch
+    ~every tile, so active-tile compaction degenerates to the dense layout.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.depo import DepoSet
+
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    return DepoSet(
+        wire=jax.random.uniform(k1, (n,), minval=0.0,
+                                maxval=cfg.num_wires - 1.0),
+        tick=jax.random.uniform(k2, (n,), minval=0.0,
+                                maxval=cfg.num_ticks - 1.0),
+        sigma_w=jnp.full((n,), 1.0),
+        sigma_t=jnp.full((n,), 1.2),
+        charge=cfg.electrons_per_depo * jnp.exp(
+            0.3 * jax.random.normal(k3, (n,))),
+    )

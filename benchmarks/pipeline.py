@@ -53,6 +53,27 @@ def fig3_vs_fig4():
         t = time_fn(f, key, depos, iters=3)
         emit(f"pipeline/fig4_scatter_{strat}", t, "")
 
+    # fused charge-grid end to end, WITH the default counter fluctuation
+    # (the in-kernel RNG lifted the old fluctuate=False restriction);
+    # interpret-mode Pallas off-TPU, so one iteration is representative
+    for strat in ["fused_pallas", "fused_pallas_compact"]:
+        c = dataclasses.replace(cfg, charge_grid_strategy=strat)
+        f = jax.jit(lambda k, d: simulate_fig4(k, d, resp, c).adc)
+        t = time_fn(f, key, depos, iters=1)
+        emit(f"pipeline/fig4_{strat}", t, f"n={cfg.num_depos};fluctuate=True")
+
+
+def occupancy_sweep(iters: int = 2):
+    """Charge-grid stage on a dense track vs diffuse depos, with the
+    physics-default fluctuation ON (eager outer calls, so the compacted
+    kernel measures true occupancy on the host) — see
+    ``common.run_occupancy_board``. Records land in BENCH_pipeline.json
+    next to the fig3/fig4 trajectory."""
+    from benchmarks.common import run_occupancy_board
+
+    run_occupancy_board("pipeline/", fluctuate=True, include_unfused=True,
+                        iters=iters)
+
 
 def event_batch_sweep(cfg: LArTPCConfig, tag: str,
                       batch_sizes=BATCH_SIZES, iters: int = 3):
@@ -92,6 +113,7 @@ def verify_batched_equals_loop(cfg: LArTPCConfig, e_sz: int = 4) -> bool:
 
 def main(full: bool = False):
     fig3_vs_fig4()
+    occupancy_sweep()
     smoke = get_config("lartpc-uboone", smoke=True)
     event_batch_sweep(smoke, "smoke")
     if not verify_batched_equals_loop(smoke):

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import emit, time_fn, write_json
+from benchmarks.common import emit, run_occupancy_board, time_fn, write_json
 from repro import tune
 from repro.config import get_config
 
@@ -36,10 +36,18 @@ def sweep_op(op: str, cfg, tag: str, iters: int = 3,
          f"strategy={decision.strategy};source={decision.source}")
 
 
+def sweep_occupancy(iters: int = 2) -> None:
+    """Kernel-level active-tile compaction board (fused + owner-computes
+    scatter, fluctuation off) — see ``common.run_occupancy_board``."""
+    run_occupancy_board("tune/", fluctuate=False, include_scatter=True,
+                        iters=iters)
+
+
 def main(full: bool = False) -> None:
     smoke = get_config("lartpc-uboone", smoke=True)
     for op in tune.TUNABLE_OPS:
         sweep_op(op, smoke, "smoke")
+    sweep_occupancy()
     if full:
         cfg = get_config("lartpc-uboone")
         for op in tune.TUNABLE_OPS:

@@ -160,13 +160,20 @@ class LArTPCConfig:
     rng_strategy: str = "counter"  # counter | pool | none
     # xla: one scatter HLO (best single-device default);
     # sort_segment: sorted sequential-traffic form (TPU-oriented);
-    # pallas: owner-computes tile kernel;
+    # pallas: owner-computes tile kernel (dense tile grid);
+    # pallas_compact: owner-computes over OCCUPIED tiles only;
     # auto: resolve via the kernel-strategy registry / tuning cache
     # (repro.tune — see docs/tuning.md)
     scatter_strategy: str = "xla"
     # unfused: rasterize -> fluctuate -> scatter_add;
-    # fused_pallas: single rasterize+scatter kernel (no fluctuation); auto
+    # unfused_bf16: same chain with bfloat16 patches (half the HBM traffic);
+    # fused_pallas: single rasterize+fluctuate+scatter kernel (in-kernel RNG);
+    # fused_pallas_compact: fused kernel over occupied tiles only; auto
     charge_grid_strategy: str = "unfused"
+    # patch array dtype between rasterize and scatter ("float32" |
+    # "bfloat16"): bf16 halves the (N, pw, pt) HBM traffic; accumulation
+    # into the readout grid always happens in float32
+    patch_dtype: str = "float32"
     # rfft2 | fft2 | auto — frequency-domain convolution layout
     fft_strategy: str = "rfft2"
     pipeline: str = "fig4"         # fig3 | fig4

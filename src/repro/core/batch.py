@@ -29,6 +29,7 @@ every accumulation.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -168,12 +169,18 @@ def simulate_events(keys: jax.Array, batch: EventBatch, resp: DetectorResponse,
 
 def make_batched_sim_fn(cfg: LArTPCConfig,
                         resp: Optional[DetectorResponse] = None,
-                        add_noise: bool = True):
+                        add_noise: bool = True, donate: bool = False):
     """jit'd ``sim(keys, batch) -> SimOutput`` closure (batched production
     path — the event-level analogue of ``make_sim_fn``).
 
     ``"auto"`` strategy fields resolve here, before jit, so one fixed traced
-    program serves the whole stream (see ``repro.tune``)."""
+    program serves the whole stream (see ``repro.tune``).
+
+    ``donate=True`` donates the (keys, batch) buffers (``donate_argnums``):
+    the streaming launcher stages a fresh batch every launch, so its input
+    memory can be recycled for outputs instead of growing the footprint by
+    a full (E, N_max) batch. Keep the default when re-invoking with the
+    same arrays (e.g. benchmark sweeps)."""
     from repro.tune import resolve_config
 
     cfg = resolve_config(cfg)
@@ -182,7 +189,7 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
     if cfg.rng_strategy == "pool":
         pool = fl.make_pool(jax.random.key(1234))
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
     def sim(keys, batch: EventBatch) -> SimOutput:
         return simulate_events(keys, batch, resp, cfg, pool=pool,
                                add_noise=add_noise)

@@ -71,18 +71,32 @@ set_default("fft_convolve", "rfft2")
 
 def fft_convolve(grid: jax.Array, resp: DetectorResponse,
                  strategy: str | None = None) -> jax.Array:
-    """Linear 2-D convolution of the charge grid with the detector response."""
+    """Linear 2-D convolution of the charge grid with the detector response.
+
+    ``strategy`` may be None (the registry's backend default), ``"auto"``
+    (tuning cache / default), or any registered candidate name. EVERY
+    concrete name dispatches through the registry — a strategy registered by
+    an extension is honored even if it shadows a built-in — and an unknown
+    name fails here with the valid candidates, not deep inside the registry.
+    """
     from repro.tune import autotune, registry
 
-    if strategy is None or strategy == "rfft2":
-        return fft_convolve_rfft2(grid, resp)
-    if strategy == "auto":
+    if strategy is None:
+        strategy = registry.default_strategy("fft_convolve")
+    elif strategy == "auto":
         shape = {"num_wires": grid.shape[0], "num_ticks": grid.shape[1],
                  "response_wires": resp.kernel.shape[0],
                  "response_ticks": resp.kernel.shape[1]}
         strategy = autotune.resolve("fft_convolve", None,
                                     shape=shape).strategy
-    return registry.get_strategy("fft_convolve", strategy).fn(grid, resp)
+    try:
+        strat = registry.get_strategy("fft_convolve", strategy)
+    except KeyError:
+        valid = sorted(registry.strategies("fft_convolve")) + ["auto"]
+        raise ValueError(
+            f"unknown fft_convolve strategy {strategy!r}; valid: {valid}"
+        ) from None
+    return strat.fn(grid, resp)
 
 
 def digitize(signal: jax.Array, cfg: LArTPCConfig) -> jax.Array:

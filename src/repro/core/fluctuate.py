@@ -65,3 +65,64 @@ def box_muller(u1: jax.Array, u2: jax.Array):
     """
     r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(u1, 1e-12)))
     return r * jnp.cos(2.0 * jnp.pi * u2)
+
+
+# ---------------------------------------------------------------------------
+# Counter-hash RNG primitives for the fused Pallas kernel
+# ---------------------------------------------------------------------------
+#
+# The fused rasterize+scatter kernel draws its fluctuation randomness *inside*
+# the kernel, seeded per (depo, tile) from the sim key. On compiled TPU it
+# uses the hardware PRNG (pltpu.prng_seed / prng_random_bits); everywhere else
+# (the Pallas interpreter has no TPU PRNG lowering) it falls back to this
+# stateless counter hash: murmur3's 32-bit finalizer over
+# (seed, depo, tile, pixel) counters. Both paths feed the same
+# bits -> uniform -> Box–Muller chain, so they are statistically
+# interchangeable (asserted against `fluctuate_counter` in the tests).
+
+
+def hash_u32(x: jax.Array) -> jax.Array:
+    """murmur3 fmix32: a full-avalanche 32-bit mixer (uint32 -> uint32).
+
+    Pure jnp, so it runs identically under the Pallas interpreter, Mosaic,
+    and plain XLA — the portable half of the in-kernel counter RNG.
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """uint32 random bits -> float32 uniform in [0, 1) (top 24 bits)."""
+    return (bits.astype(jnp.uint32) >> jnp.uint32(8)).astype(
+        jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def counter_normals(seed0: jax.Array, seed1: jax.Array, stream: jax.Array,
+                    counters: jax.Array) -> jax.Array:
+    """Std normals from (seed, stream, counter) — the interpret-mode fallback.
+
+    seed0/seed1 : uint32 scalars (the raw sim key data)
+    stream      : uint32 scalar identifying the (depo, tile) pair
+    counters    : uint32 array of per-pixel counters (any shape)
+    Returns float32 std normals with ``counters``' shape. Fully deterministic:
+    the same (key, depo, tile, pixel) always yields the same draw, on every
+    backend.
+    """
+    base = hash_u32(seed1 ^ stream) + seed0.astype(jnp.uint32)
+    two = jnp.uint32(2)
+    # hash the counter BEFORE mixing with the stream base: adding a raw
+    # counter to the base makes every stream a contiguous window of one
+    # global 32-bit sequence, and at production scale (~2^37 draws/event)
+    # windows collide birthday-style — whole pixel runs of unrelated depos
+    # would repeat bit-identically. fmix(counter) ^ base has no window
+    # structure: cross-stream coincidences drop to the generic per-value
+    # birthday rate, and u1/u2 never collide together.
+    b1 = hash_u32(base ^ hash_u32(two * counters))
+    b2 = hash_u32(base ^ hash_u32(two * counters + jnp.uint32(1)))
+    # 1 - u keeps the log argument in (0, 1]; box_muller clamps the rest
+    return box_muller(1.0 - uniform_from_bits(b1), uniform_from_bits(b2))

@@ -21,6 +21,7 @@ strategy fields *before* jit so the traced program is fixed.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -67,12 +68,24 @@ def charge_grid_unfused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
     return scatter_add(patches, w0, t0, cfg)
 
 
+@register_strategy("charge_grid", "unfused_bf16",
+                   note="unfused chain with bfloat16 patches (f32 accumulate)")
+def charge_grid_unfused_bf16(key: jax.Array, depos: DepoSet,
+                             cfg: LArTPCConfig,
+                             pool: Optional[jax.Array] = None) -> jax.Array:
+    import dataclasses
+
+    return charge_grid_unfused(
+        key, depos, dataclasses.replace(cfg, patch_dtype="bfloat16"), pool)
+
+
 def _fused_viable(ctx) -> bool:
-    # the fused kernel draws no fluctuation randomness, and off-TPU it runs
-    # in the Pallas interpreter — keep it out of the candidate set when the
-    # physics needs fluctuation or the grid is interpret-prohibitive
+    # the fused kernel draws counter-style fluctuation randomness in kernel,
+    # so it competes in the physics-default config; the paper-faithful
+    # pre-computed "pool" stream cannot be reproduced in kernel, and off-TPU
+    # the Pallas interpreter makes production grids prohibitive
     cfg = ctx.cfg
-    if cfg is None or (cfg.fluctuate and cfg.rng_strategy != "none"):
+    if cfg is None or (cfg.fluctuate and cfg.rng_strategy == "pool"):
         return False
     if ctx.backend == "tpu":
         return True
@@ -80,18 +93,39 @@ def _fused_viable(ctx) -> bool:
     return cells <= (1 << 21)
 
 
+def _fused_key(key: jax.Array, cfg: LArTPCConfig) -> Optional[jax.Array]:
+    """The in-kernel RNG key, or None when the config wants no fluctuation."""
+    if cfg.fluctuate and cfg.rng_strategy == "counter":
+        return key
+    if cfg.fluctuate and cfg.rng_strategy == "pool":
+        raise ValueError(
+            "fused charge-grid strategies draw in-kernel counter randomness "
+            "and cannot reproduce the pre-computed pool stream; use "
+            "rng_strategy='counter'/'none' or charge_grid_strategy='unfused'")
+    return None
+
+
 @register_strategy("charge_grid", "fused_pallas", available=_fused_viable,
-                   note="fused rasterize+scatter Pallas kernel (no RNG)")
+                   note="fused rasterize+fluctuate+scatter Pallas kernel")
 def charge_grid_fused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
                       pool: Optional[jax.Array] = None) -> jax.Array:
     from repro.kernels.fused_sim.ops import simulate_charge_grid
 
-    del key, pool  # the fused kernel is deterministic: no fluctuation stage
-    if cfg.fluctuate and cfg.rng_strategy != "none":
-        raise ValueError(
-            "charge_grid_strategy='fused_pallas' skips charge fluctuation; "
-            "set fluctuate=False or rng_strategy='none' (or use 'unfused')")
-    return simulate_charge_grid(depos, cfg)
+    del pool  # in-kernel counter RNG; the pool strategy is rejected above
+    return simulate_charge_grid(depos, cfg, key=_fused_key(key, cfg))
+
+
+@register_strategy("charge_grid", "fused_pallas_compact",
+                   available=_fused_viable,
+                   note="fused kernel over occupied tiles only")
+def charge_grid_fused_compact(key: jax.Array, depos: DepoSet,
+                              cfg: LArTPCConfig,
+                              pool: Optional[jax.Array] = None) -> jax.Array:
+    from repro.kernels.fused_sim.ops import simulate_charge_grid_compact
+
+    del pool
+    return simulate_charge_grid_compact(depos, cfg,
+                                        key=_fused_key(key, cfg))
 
 
 set_default("charge_grid", "unfused")
@@ -177,11 +211,18 @@ def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
 
 
 def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
-                add_noise: bool = True):
+                add_noise: bool = True, donate: bool = False):
     """Return a jit'd fig4 simulate(key, depos) closure (the production path).
 
     Any ``"auto"`` strategy fields resolve (tuning cache / backend default)
     here, before jit, so the traced program is fixed.
+
+    ``donate=True`` donates the (key, depos) input buffers to the call
+    (``jax.jit`` ``donate_argnums``): XLA reuses their device memory for
+    outputs instead of allocating fresh buffers — the right choice for
+    streaming drivers that stage fresh inputs every launch. Callers that
+    re-invoke with the *same* arrays (benchmark loops) must keep the
+    default.
     """
     from repro.tune import resolve_config
 
@@ -191,7 +232,7 @@ def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
     if cfg.rng_strategy == "pool":
         pool = fl.make_pool(jax.random.key(1234))
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
     def sim(key, depos: DepoSet) -> SimOutput:
         return simulate_fig4(key, depos, resp, cfg, pool=pool, add_noise=add_noise)
 

@@ -38,13 +38,15 @@ def _axis_weights(center: jax.Array, sigma: jax.Array, origin: jax.Array, npix: 
 def rasterize(depos: DepoSet, cfg: LArTPCConfig):
     """All-depo batched rasterization.
 
-    Returns (patches, w0, t0): patches (N, pw, pt) float32, origins (N,) int32.
+    Returns (patches, w0, t0): patches (N, pw, pt) in ``cfg.patch_dtype``
+    (weights are always computed in float32; a narrower patch dtype only
+    changes what is materialized between stages), origins (N,) int32.
     """
     w0, t0 = depo_patch_origin(depos, cfg)
     ww = _axis_weights(depos.wire, depos.sigma_w, w0, cfg.patch_wires)   # (N, pw)
     wt = _axis_weights(depos.tick, depos.sigma_t, t0, cfg.patch_ticks)   # (N, pt)
     patches = depos.charge[:, None, None] * ww[:, :, None] * wt[:, None, :]
-    return patches, w0, t0
+    return patches.astype(jnp.dtype(cfg.patch_dtype)), w0, t0
 
 
 def rasterize_one(wire, tick, sigma_w, sigma_t, charge, w0, t0, pw: int, pt: int):

@@ -1,24 +1,32 @@
 """Scatter-add: accumulate all depo patches into the readout grid S(t, x).
 
 The paper's Kokkos port uses ``Kokkos::atomic_add`` (Fig. 5). TPUs/XLA expose
-no device atomics; we implement three deterministic TPU-native strategies:
+no device atomics; we implement four deterministic TPU-native strategies:
 
-  xla          : one big ``scatter-add`` HLO (grid.at[flat_idx].add(vals)).
-                 XLA serializes colliding updates; simplest, good baseline.
-  sort_segment : radix-sort pixel contributions by destination index, then
-                 scatter with ``indices_are_sorted=True`` — the sorted stream
-                 turns random-access HBM traffic into sequential traffic, the
-                 TPU analogue of coalesced atomics.
-  pallas       : owner-computes tile binning (``repro.kernels.scatter_add``):
-                 the output grid is cut into VMEM tiles; depos are binned to
-                 the tiles they touch; each tile *gathers* its contributions.
-                 Scatter inverted into gather = canonical TPU formulation,
-                 bitwise deterministic (atomics are not).
+  xla           : one big ``scatter-add`` HLO (grid.at[flat_idx].add(vals)).
+                  XLA serializes colliding updates; simplest, good baseline.
+  sort_segment  : sort pixel contributions by destination index with one
+                  fused ``lax.sort_key_val``, segment-reduce the equal-
+                  destination runs, then scatter the run totals with
+                  ``indices_are_sorted=True`` — the sorted stream turns
+                  random-access HBM traffic into sequential traffic, the TPU
+                  analogue of coalesced atomics.
+  pallas        : owner-computes tile binning (``repro.kernels.scatter_add``):
+                  the output grid is cut into VMEM tiles; depos are binned to
+                  the tiles they touch; each tile *gathers* its contributions.
+                  Scatter inverted into gather = canonical TPU formulation,
+                  bitwise deterministic (atomics are not).
+  pallas_compact: the same owner-computes kernel launched over OCCUPIED
+                  tiles only — kernel work scales with occupied readout
+                  area instead of detector area (track-like depo sets leave
+                  most tiles empty).
 
-All strategies produce identical results (up to float addition order for
-`xla`), asserted in tests. Each registers itself as a ``scatter_add``
-candidate in the kernel-strategy registry (``repro.tune``); set
-``cfg.scatter_strategy="auto"`` to pick per backend from the tuning cache.
+All strategies accumulate in float32 (patches may arrive narrower, see
+``cfg.patch_dtype``) and produce identical results (up to float addition
+order for `xla`), asserted in tests. Each registers itself as a
+``scatter_add`` candidate in the kernel-strategy registry (``repro.tune``);
+set ``cfg.scatter_strategy="auto"`` to pick per backend from the tuning
+cache.
 """
 from __future__ import annotations
 
@@ -37,37 +45,51 @@ def _flat_pixel_indices(w0: jax.Array, t0: jax.Array, pw: int, pt: int, num_tick
     return (w0[:, None, None] + dw) * num_ticks + (t0[:, None, None] + dt)
 
 
+def flat_pixel_contribs(patches: jax.Array, w0: jax.Array, t0: jax.Array,
+                        num_ticks: int):
+    """Flattened (idx, vals) contribution stream, built ONCE and shared by
+    the HLO-scatter strategies.
+
+    idx  : (N*pw*pt,) int32 flat destination pixel of every patch pixel
+    vals : (N*pw*pt,) float32 values (upcast from ``cfg.patch_dtype`` —
+           narrow patches halve the HBM read; accumulation stays f32)
+    """
+    n, pw, pt = patches.shape
+    idx = _flat_pixel_indices(w0, t0, pw, pt, num_ticks).reshape(-1)
+    vals = patches.reshape(-1).astype(jnp.float32)
+    return idx, vals
+
+
 @register_strategy("scatter_add", "xla", note="one scatter-add HLO")
 def scatter_xla(patches: jax.Array, w0: jax.Array, t0: jax.Array, cfg: LArTPCConfig):
-    n, pw, pt = patches.shape
-    idx = _flat_pixel_indices(w0, t0, pw, pt, cfg.num_ticks).reshape(-1)
-    grid = jnp.zeros((cfg.num_wires * cfg.num_ticks,), patches.dtype)
-    grid = grid.at[idx].add(patches.reshape(-1), mode="drop")
+    idx, vals = flat_pixel_contribs(patches, w0, t0, cfg.num_ticks)
+    grid = jnp.zeros((cfg.num_wires * cfg.num_ticks,), jnp.float32)
+    grid = grid.at[idx].add(vals, mode="drop")
     return grid.reshape(cfg.num_wires, cfg.num_ticks)
 
 
 @register_strategy("scatter_add", "sort_segment",
-                   note="sort by destination, segment-sum, sorted scatter")
+                   note="fused sort by destination, segment-sum, sorted scatter")
 def scatter_sort_segment(patches: jax.Array, w0: jax.Array, t0: jax.Array,
                          cfg: LArTPCConfig):
-    n, pw, pt = patches.shape
-    idx = _flat_pixel_indices(w0, t0, pw, pt, cfg.num_ticks).reshape(-1)
-    vals = patches.reshape(-1)
-    order = jnp.argsort(idx)
-    idx_s = idx[order]
-    vals_s = vals[order]
+    idx, vals = flat_pixel_contribs(patches, w0, t0, cfg.num_ticks)
+    # ONE fused sort carries the values with the keys (no argsort + two
+    # gathers: half the sort-stage memory traffic)
+    idx_s, vals_s = jax.lax.sort_key_val(idx, vals)
     # collapse runs of equal destination before the scatter: after sorting,
-    # segment-sum by run id, then one sorted scatter of the run totals.
+    # segment-reduce by run id, then one sorted scatter of the run totals.
     new_run = jnp.concatenate(
         [jnp.array([0], jnp.int32), (idx_s[1:] != idx_s[:-1]).astype(jnp.int32)])
     seg_id = jnp.cumsum(new_run)
     nseg = vals_s.shape[0]  # static upper bound on number of runs
-    totals = jax.ops.segment_sum(vals_s, seg_id, num_segments=nseg)
-    first_of_seg = new_run.astype(bool).at[0].set(True)
-    first_pos = jnp.nonzero(first_of_seg, size=nseg, fill_value=0)[0]
-    seg_dest = idx_s[first_pos]
+    totals = jax.ops.segment_sum(vals_s, seg_id, num_segments=nseg,
+                                 indices_are_sorted=True)
+    # each run's destination: a segment-max of the (constant-per-run) sorted
+    # indices — replaces the old jnp.nonzero first-position pass + gather
+    seg_dest = jax.ops.segment_max(idx_s, seg_id, num_segments=nseg,
+                                   indices_are_sorted=True)
     valid = jnp.arange(nseg) <= seg_id[-1]
-    grid = jnp.zeros((cfg.num_wires * cfg.num_ticks,), patches.dtype)
+    grid = jnp.zeros((cfg.num_wires * cfg.num_ticks,), jnp.float32)
     grid = grid.at[jnp.where(valid, seg_dest, cfg.num_wires * cfg.num_ticks)].add(
         jnp.where(valid, totals, 0.0), mode="drop", indices_are_sorted=True,
         unique_indices=False)
@@ -98,6 +120,19 @@ def scatter_pallas(patches: jax.Array, w0: jax.Array, t0: jax.Array,
     )
 
 
+@register_strategy("scatter_add", "pallas_compact", available=_pallas_viable,
+                   note="owner-computes kernel over occupied tiles only")
+def scatter_pallas_compact(patches: jax.Array, w0: jax.Array, t0: jax.Array,
+                           cfg: LArTPCConfig, interpret: bool | None = None):
+    from repro.kernels.scatter_add.ops import scatter_add_tiles_compact
+
+    return scatter_add_tiles_compact(
+        patches, w0, t0,
+        num_wires=cfg.num_wires, num_ticks=cfg.num_ticks,
+        interpret=default_interpret() if interpret is None else interpret,
+    )
+
+
 set_default("scatter_add", "xla")
 
 #: name -> fn view of the registered candidates (back-compat surface)
@@ -105,6 +140,7 @@ STRATEGIES = {
     "xla": scatter_xla,
     "sort_segment": scatter_sort_segment,
     "pallas": scatter_pallas,
+    "pallas_compact": scatter_pallas_compact,
 }
 
 

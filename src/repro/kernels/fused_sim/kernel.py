@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: FUSED rasterize + scatter-add (beyond-paper Fig. 4++).
+"""Pallas TPU kernel: FUSED rasterize + fluctuate + scatter-add (Fig. 4++).
 
 The paper's Fig. 4 keeps data on-device between stages; this kernel goes one
 step further: the (N, 24, 128) patch array never exists in HBM at all. Each
@@ -7,6 +7,22 @@ coordinates and accumulates in VMEM — at MicroBooNE scale (100k depos) this
 removes ~1.2 GB of HBM write+read traffic, trading it for ~2x more VPU
 transcendentals (erf over tile extents instead of patch extents): a good
 trade at 819 GB/s vs ~100+ Gexp/s.
+
+Two additions over the original fused kernel:
+
+  * in-kernel counter RNG — binomial-approximation charge fluctuation is
+    applied to each (depo, tile) contribution *inside* the kernel, seeded per
+    (depo, tile) from the sim key: ``pltpu.prng_seed``/``prng_random_bits``
+    when Mosaic-compiled on TPU, and the portable counter hash from
+    ``repro.core.fluctuate`` under the interpreter (which has no TPU PRNG
+    lowering). This lifts the old ``fluctuate=False`` restriction: the fused
+    strategy now competes in the physics-default configuration.
+  * an active-tile variant (``fused_rasterize_scatter_compact``) whose grid
+    runs over a *compacted* list of occupied tiles (scalar-prefetched tile
+    coordinates) instead of the dense ``(n_tiles, k_max)`` product — kernel
+    work scales with occupied readout area, not detector area. Track-like
+    depo sets leave most tiles empty; see ``ops.py`` for the binning and the
+    occupancy bucketing that bounds retraces.
 
 Grid/binning layout matches ``kernels/scatter_add`` (owner-computes tiles,
 scalar-prefetched per-tile depo lists).
@@ -20,12 +36,93 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.fluctuate import box_muller, counter_normals, uniform_from_bits
+
 _SQRT2 = 1.4142135623730951
+#: stream-id mixing constants (distinct odd 32-bit constants so the
+#: (depo, tile) -> stream map is injective enough for statistics)
+_C_DEPO = 0x9E3779B9
+_C_TILE = 0x7FEB352D
+
+
+def _tile_normals(seed_ref, d, t_id, *, tw: int, tt: int, tpu_prng: bool):
+    """(TW, TT) std normals for one (depo, tile) grid step.
+
+    Seeded from the sim key (seed_ref, 2 x int32 scalar-prefetch) plus the
+    (depo id, GLOBAL tile id) pair, so the dense and compacted kernels draw
+    identical streams and their fluctuated grids agree bit for bit.
+    """
+    if tpu_prng:
+        # compiled TPU path: hardware PRNG, seeded per (depo, tile)
+        pltpu.prng_seed(seed_ref[0], seed_ref[1], d, t_id)
+        b1 = pltpu.bitcast(pltpu.prng_random_bits((tw, tt)), jnp.uint32)
+        b2 = pltpu.bitcast(pltpu.prng_random_bits((tw, tt)), jnp.uint32)
+        return box_muller(1.0 - uniform_from_bits(b1), uniform_from_bits(b2))
+    # portable path (interpreter / any backend): stateless counter hash
+    row = jax.lax.broadcasted_iota(jnp.uint32, (tw, tt), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (tw, tt), 1)
+    pix = row * jnp.uint32(tt) + col
+    stream = (d.astype(jnp.uint32) * jnp.uint32(_C_DEPO)
+              ^ t_id.astype(jnp.uint32) * jnp.uint32(_C_TILE))
+    return counter_normals(seed_ref[0].astype(jnp.uint32),
+                           seed_ref[1].astype(jnp.uint32), stream, pix)
+
+
+def _depo_tile_contrib(d, t_id, wire_ref, tick_ref, sw_ref, st_ref, q_ref,
+                       w0_ref, t0_ref, seed_ref, *, tw: int, tt: int,
+                       pw: int, pt: int, tiles_t: int, fluctuate: bool,
+                       tpu_prng: bool):
+    """(TW, TT) charge contribution of depo ``d`` to global tile ``t_id``.
+
+    Rasterizes the depo's bin-integrated Gaussian at the tile's absolute
+    coordinates (masked to the patch support) and, when ``fluctuate``,
+    applies the per-pixel binomial normal approximation with in-kernel
+    randomness. Pixels outside the patch support have zero mean and zero
+    variance, so they stay exactly 0.0 with or without fluctuation.
+    """
+    wire = wire_ref[d]
+    tick = tick_ref[d]
+    sw = sw_ref[d]
+    st = st_ref[d]
+    q = q_ref[d]
+    w0 = w0_ref[d].astype(jnp.float32)   # patch origin (absolute)
+    t0 = t0_ref[d].astype(jnp.float32)
+    tile_w0 = ((t_id // tiles_t) * tw).astype(jnp.float32)
+    tile_t0 = ((t_id % tiles_t) * tt).astype(jnp.float32)
+
+    # absolute wire/tick coordinates of this tile's rows/cols
+    aw = tile_w0 + jax.lax.broadcasted_iota(jnp.float32, (tw, 1), 0)
+    at = tile_t0 + jax.lax.broadcasted_iota(jnp.float32, (1, tt), 1)
+
+    lo_w = jax.lax.erf((aw - wire) / (sw * _SQRT2))
+    hi_w = jax.lax.erf((aw + 1.0 - wire) / (sw * _SQRT2))
+    ww = jnp.maximum(0.5 * (hi_w - lo_w), 0.0)        # (TW, 1)
+    in_w = (aw >= w0) & (aw < w0 + pw)                # patch support
+    ww = jnp.where(in_w, ww, 0.0)
+
+    lo_t = jax.lax.erf((at - tick) / (st * _SQRT2))
+    hi_t = jax.lax.erf((at + 1.0 - tick) / (st * _SQRT2))
+    wt = jnp.maximum(0.5 * (hi_t - lo_t), 0.0)        # (1, TT)
+    in_t = (at >= t0) & (at < t0 + pt)
+    wt = jnp.where(in_t, wt, 0.0)
+
+    vals = q * ww * wt
+    if fluctuate:
+        # binomial normal approximation, matching core.fluctuate:
+        # mean = vals, var = vals * (1 - vals / q), clamped at zero
+        normals = _tile_normals(seed_ref, d, t_id, tw=tw, tt=tt,
+                                tpu_prng=tpu_prng)
+        qq = jnp.maximum(q, 1.0)
+        p = jnp.clip(vals / qq, 0.0, 1.0)
+        var = jnp.maximum(vals * (1.0 - p), 0.0)
+        vals = jnp.maximum(vals + jnp.sqrt(var) * normals, 0.0)
+    return vals
 
 
 def _fused_kernel(ids_ref, wire_ref, tick_ref, sw_ref, st_ref, q_ref,
-                  w0_ref, t0_ref, out_ref, *, k_max: int, tw: int, tt: int,
-                  pw: int, pt: int, tiles_t: int):
+                  w0_ref, t0_ref, seed_ref, out_ref, *, k_max: int, tw: int,
+                  tt: int, pw: int, pt: int, tiles_t: int, fluctuate: bool,
+                  tpu_prng: bool):
     """Grid step (i, k): rasterize depo ids[i*K+k] straight into tile i."""
     i = pl.program_id(0)
     k = pl.program_id(1)
@@ -38,53 +135,68 @@ def _fused_kernel(ids_ref, wire_ref, tick_ref, sw_ref, st_ref, q_ref,
 
     @pl.when(d >= 0)
     def _accum():
-        dd = jnp.maximum(d, 0)
-        wire = wire_ref[dd]
-        tick = tick_ref[dd]
-        sw = sw_ref[dd]
-        st = st_ref[dd]
-        q = q_ref[dd]
-        w0 = w0_ref[dd].astype(jnp.float32)   # patch origin (absolute)
-        t0 = t0_ref[dd].astype(jnp.float32)
-        tile_w0 = ((i // tiles_t) * tw).astype(jnp.float32)
-        tile_t0 = ((i % tiles_t) * tt).astype(jnp.float32)
+        out_ref[...] += _depo_tile_contrib(
+            jnp.maximum(d, 0), i, wire_ref, tick_ref, sw_ref, st_ref, q_ref,
+            w0_ref, t0_ref, seed_ref, tw=tw, tt=tt, pw=pw, pt=pt,
+            tiles_t=tiles_t, fluctuate=fluctuate, tpu_prng=tpu_prng)
 
-        # absolute wire/tick coordinates of this tile's rows/cols
-        aw = tile_w0 + jax.lax.broadcasted_iota(jnp.float32, (tw, 1), 0)
-        at = tile_t0 + jax.lax.broadcasted_iota(jnp.float32, (1, tt), 1)
 
-        lo_w = jax.lax.erf((aw - wire) / (sw * _SQRT2))
-        hi_w = jax.lax.erf((aw + 1.0 - wire) / (sw * _SQRT2))
-        ww = jnp.maximum(0.5 * (hi_w - lo_w), 0.0)        # (TW, 1)
-        in_w = (aw >= w0) & (aw < w0 + pw)                # patch support
-        ww = jnp.where(in_w, ww, 0.0)
+def _fused_kernel_compact(tiles_ref, ids_ref, wire_ref, tick_ref, sw_ref,
+                          st_ref, q_ref, w0_ref, t0_ref, seed_ref, out_ref, *,
+                          k_max: int, tw: int, tt: int, pw: int, pt: int,
+                          tiles_t: int, fluctuate: bool, tpu_prng: bool):
+    """Grid step (i, k): rasterize depo ids[i*K+k] into ACTIVE tile i.
 
-        lo_t = jax.lax.erf((at - tick) / (st * _SQRT2))
-        hi_t = jax.lax.erf((at + 1.0 - tick) / (st * _SQRT2))
-        wt = jnp.maximum(0.5 * (hi_t - lo_t), 0.0)        # (1, TT)
-        in_t = (at >= t0) & (at < t0 + pt)
-        wt = jnp.where(in_t, wt, 0.0)
+    ``tiles_ref[i]`` holds the global tile id of the i-th occupied tile
+    (scalar-prefetched; -1 pads the bucketed active list). Inactive grid
+    steps only zero their output block.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(1)
 
-        out_ref[...] += q * ww * wt
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t_id = tiles_ref[i]
+    d = ids_ref[i * k_max + k]
+
+    @pl.when((t_id >= 0) & (d >= 0))
+    def _accum():
+        out_ref[0] += _depo_tile_contrib(
+            jnp.maximum(d, 0), jnp.maximum(t_id, 0), wire_ref, tick_ref,
+            sw_ref, st_ref, q_ref, w0_ref, t0_ref, seed_ref, tw=tw, tt=tt,
+            pw=pw, pt=pt, tiles_t=tiles_t, fluctuate=fluctuate,
+            tpu_prng=tpu_prng)
+
+
+def _seed_operand(seed):
+    """(2,) int32 scalar-prefetch operand from raw PRNG key data (or None)."""
+    if seed is None:
+        return jnp.zeros((2,), jnp.int32)
+    return jnp.asarray(seed).astype(jnp.uint32).reshape(-1)[:2].view(jnp.int32)
 
 
 def fused_rasterize_scatter(wire, tick, sigma_w, sigma_t, charge, w0, t0,
                             tile_ids, *, num_wires: int, num_ticks: int,
                             tw: int, tt: int, k_max: int, pw: int, pt: int,
-                            interpret: bool = True):
+                            interpret: bool = True, seed=None,
+                            fluctuate: bool = False):
     """Depos -> charge grid in ONE kernel (no patch array in HBM).
 
     Scalar-prefetch operands: tile_ids (n_tiles*k_max,) int32 (-1 padded),
-    depo params (N,) f32 / int32.
+    depo params (N,) f32 / int32, seed (2,) int32 raw key data (only read
+    when ``fluctuate``).
     """
     tiles_w = (num_wires + tw - 1) // tw
     tiles_t = (num_ticks + tt - 1) // tt
     n_tiles = tiles_w * tiles_t
 
     kernel = functools.partial(_fused_kernel, k_max=k_max, tw=tw, tt=tt,
-                               pw=pw, pt=pt, tiles_t=tiles_t)
+                               pw=pw, pt=pt, tiles_t=tiles_t,
+                               fluctuate=fluctuate, tpu_prng=not interpret)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
+        num_scalar_prefetch=9,
         grid=(n_tiles, k_max),
         in_specs=[],
         out_specs=pl.BlockSpec(
@@ -98,5 +210,61 @@ def fused_rasterize_scatter(wire, tick, sigma_w, sigma_t, charge, w0, t0,
         interpret=interpret,
     )(tile_ids, wire.astype(jnp.float32), tick.astype(jnp.float32),
       sigma_w.astype(jnp.float32), sigma_t.astype(jnp.float32),
-      charge.astype(jnp.float32), w0.astype(jnp.int32), t0.astype(jnp.int32))
+      charge.astype(jnp.float32), w0.astype(jnp.int32), t0.astype(jnp.int32),
+      _seed_operand(seed))
     return out[:num_wires, :num_ticks]
+
+
+def fused_rasterize_scatter_compact(wire, tick, sigma_w, sigma_t, charge,
+                                    w0, t0, active_tiles, tile_ids, *,
+                                    num_wires: int, num_ticks: int, tw: int,
+                                    tt: int, k_max: int, pw: int, pt: int,
+                                    interpret: bool = True, seed=None,
+                                    fluctuate: bool = False):
+    """Active-tile fused kernel: grid (n_active, k_max), not (n_tiles, k_max).
+
+    active_tiles : (n_active,) int32 global tile ids, -1 padded
+    tile_ids     : (n_active * k_max,) int32 depo ids per active tile
+    The kernel emits one (tw, tt) block per active slot; the blocks are then
+    scattered back into the full grid (an O(occupied area) write).
+    """
+    tiles_w = (num_wires + tw - 1) // tw
+    tiles_t = (num_ticks + tt - 1) // tt
+    n_tiles = tiles_w * tiles_t
+    n_active = active_tiles.shape[0]
+
+    kernel = functools.partial(_fused_kernel_compact, k_max=k_max, tw=tw,
+                               tt=tt, pw=pw, pt=pt, tiles_t=tiles_t,
+                               fluctuate=fluctuate, tpu_prng=not interpret)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=10,
+        grid=(n_active, k_max),
+        in_specs=[],
+        out_specs=pl.BlockSpec((1, tw, tt), lambda i, k, *refs: (i, 0, 0)),
+    )
+    blocks = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_active, tw, tt), jnp.float32),
+        interpret=interpret,
+    )(active_tiles, tile_ids, wire.astype(jnp.float32),
+      tick.astype(jnp.float32), sigma_w.astype(jnp.float32),
+      sigma_t.astype(jnp.float32), charge.astype(jnp.float32),
+      w0.astype(jnp.int32), t0.astype(jnp.int32), _seed_operand(seed))
+    return scatter_tiles_to_grid(blocks, active_tiles, tiles_w, tiles_t,
+                                 tw, tt)[:num_wires, :num_ticks]
+
+
+def scatter_tiles_to_grid(blocks, active_tiles, tiles_w: int, tiles_t: int,
+                          tw: int, tt: int):
+    """Place (n_active, tw, tt) tile blocks into the full padded grid.
+
+    Padding slots (active_tiles == -1) are dropped; unoccupied tiles stay
+    zero. The write is proportional to the occupied area.
+    """
+    n_tiles = tiles_w * tiles_t
+    dest = jnp.where(active_tiles >= 0, active_tiles, n_tiles)
+    full = jnp.zeros((n_tiles, tw, tt), blocks.dtype)
+    full = full.at[dest].set(blocks, mode="drop")
+    return full.reshape(tiles_w, tiles_t, tw, tt).swapaxes(1, 2).reshape(
+        tiles_w * tw, tiles_t * tt)

@@ -48,13 +48,49 @@ def _scatter_kernel(ids_ref, w0_ref, t0_ref, patch_ref, out_ref, *,
         tile_t0 = (i % tiles_t) * tt
         off_w = w0_ref[jnp.maximum(d, 0)] - tile_w0   # may be negative
         off_t = t0_ref[jnp.maximum(d, 0)] - tile_t0
-        patch = patch_ref[0]                          # (PW, PT)
+        # patches may arrive in a narrow dtype (cfg.patch_dtype="bfloat16"):
+        # the DMA moves the narrow bits, the VMEM accumulation stays f32
+        patch = patch_ref[0].astype(jnp.float32)      # (PW, PT)
         # place the patch into a zero-padded staging buffer at a dynamic
         # offset, then add the tile window — static shapes, dynamic offsets.
         buf = jnp.zeros((tw + 2 * pw_pad, tt + 2 * pt_pad), patch.dtype)
         buf = jax.lax.dynamic_update_slice(
             buf, patch, (off_w + pw_pad, off_t + pt_pad))
         out_ref[...] += jax.lax.dynamic_slice(
+            buf, (pw_pad, pt_pad), (tw, tt))
+
+
+def _scatter_kernel_compact(tiles_ref, ids_ref, w0_ref, t0_ref, patch_ref,
+                            out_ref, *, k_max: int, tw: int, tt: int,
+                            pw_pad: int, pt_pad: int, tiles_t: int):
+    """Grid step (i, k): accumulate depo ids[i*K+k] into ACTIVE tile i.
+
+    Identical to ``_scatter_kernel`` except the tile coordinate comes from
+    the scalar-prefetched active-tile list (``tiles_ref[i]`` is a global tile
+    id, -1 padded) and the output is one (1, TW, TT) block per active slot —
+    kernel work scales with occupied tiles, not detector tiles.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t_id = tiles_ref[i]
+    d = ids_ref[i * k_max + k]
+
+    @pl.when((t_id >= 0) & (d >= 0))
+    def _accum():
+        tile_w0 = (jnp.maximum(t_id, 0) // tiles_t) * tw
+        tile_t0 = (jnp.maximum(t_id, 0) % tiles_t) * tt
+        off_w = w0_ref[jnp.maximum(d, 0)] - tile_w0   # may be negative
+        off_t = t0_ref[jnp.maximum(d, 0)] - tile_t0
+        patch = patch_ref[0].astype(jnp.float32)      # (PW, PT)
+        buf = jnp.zeros((tw + 2 * pw_pad, tt + 2 * pt_pad), jnp.float32)
+        buf = jax.lax.dynamic_update_slice(
+            buf, patch, (off_w + pw_pad, off_t + pt_pad))
+        out_ref[0] += jax.lax.dynamic_slice(
             buf, (pw_pad, pt_pad), (tw, tt))
 
 
@@ -99,3 +135,44 @@ def scatter_add_pallas(patches, w0, t0, tile_ids, *, num_wires: int,
                                        jnp.float32),
         interpret=interpret,
     )(tile_ids, w0, t0, patches)
+
+
+def scatter_add_pallas_compact(patches, w0, t0, active_tiles, tile_ids, *,
+                               num_wires: int, num_ticks: int, tw: int,
+                               tt: int, k_max: int, interpret: bool = True):
+    """Active-tile owner-computes scatter-add.
+
+    active_tiles : (n_active,) int32 global tile ids of occupied tiles, -1
+                   padded to the occupancy bucket
+    tile_ids     : (n_active * k_max,) int32 depo ids per active tile
+    Returns (n_active, tw, tt) f32 tile blocks — the caller scatters them
+    back into the full grid (see ``fused_sim.kernel.scatter_tiles_to_grid``).
+    """
+    n, pw_pad, pt_pad = patches.shape
+    tiles_t = (num_ticks + tt - 1) // tt
+    n_active = active_tiles.shape[0]
+    assert tw >= pw_pad and tt >= pt_pad, "tile must cover a padded patch"
+
+    kernel = functools.partial(
+        _scatter_kernel_compact, k_max=k_max, tw=tw, tt=tt, pw_pad=pw_pad,
+        pt_pad=pt_pad, tiles_t=tiles_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n_active, k_max),
+        in_specs=[
+            pl.BlockSpec(
+                (1, pw_pad, pt_pad),
+                lambda i, k, tiles, ids, w0s, t0s: (
+                    jnp.maximum(ids[i * k_max + k], 0), 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, tw, tt),
+                               lambda i, k, tiles, ids, w0s, t0s: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_active, tw, tt), jnp.float32),
+        interpret=interpret,
+    )(active_tiles, tile_ids, w0, t0, patches)

@@ -52,7 +52,12 @@ def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
     """
     if batch_events < 1:
         raise ValueError(f"batch_events must be >= 1, got {batch_events}")
-    sim = sim if sim is not None else make_batched_sim_fn(cfg)
+    # every launch stages a FRESH batch, so the input buffers are donated:
+    # XLA recycles their device memory for outputs (cuts the steady-state
+    # footprint by one (E, N_max) batch + keys). CPU never implements
+    # donation — skip it there to avoid a pointless warning per compile.
+    if sim is None:
+        sim = make_batched_sim_fn(cfg, donate=jax.default_backend() != "cpu")
     key = jax.random.key(seed)
     num_batches = -(-num_events // batch_events)
     # fixed depo padding across batches -> a single compiled program

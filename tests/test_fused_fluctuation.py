@@ -1,0 +1,130 @@
+"""In-kernel RNG of the fused charge-grid kernel (ISSUE-3 tentpole).
+
+The fused Pallas kernel applies binomial-approximation charge fluctuation
+*inside* the kernel (counter RNG seeded per (depo, tile) from the sim key).
+These tests pin the contract, in interpret mode:
+
+  * statistical equivalence with ``fluctuate_counter``: matched per-patch
+    mean and variance (different RNG streams, same distribution);
+  * determinism: the same key reproduces the same grid bit for bit, and
+    different keys differ;
+  * ``key=None`` keeps the original deterministic (mean-field) behavior.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet, depo_patch_origin
+from repro.core.fluctuate import (counter_normals, fluctuate_counter,
+                                  hash_u32, uniform_from_bits)
+from repro.core.rasterize import rasterize
+from repro.kernels.fused_sim.ops import simulate_charge_grid
+from repro.kernels.fused_sim.ref import simulate_charge_grid_ref
+
+CFG = LArTPCConfig(num_wires=64, num_ticks=256, num_depos=16)
+
+
+def lattice_depos(cfg=CFG, charge=10_000.0) -> DepoSet:
+    """Non-overlapping identical-charge depos: per-depo patch sums can be
+    read back from the grid exactly."""
+    pw, pt = cfg.patch_wires, cfg.patch_ticks
+    wires = np.arange(pw, cfg.num_wires - pw, pw + 8, dtype=np.float32)
+    ticks = np.arange(pt, cfg.num_ticks - pt, pt + 12, dtype=np.float32)
+    ww, tt = np.meshgrid(wires, ticks, indexing="ij")
+    n = ww.size
+    return DepoSet(wire=jnp.asarray(ww.ravel()), tick=jnp.asarray(tt.ravel()),
+                   sigma_w=jnp.full((n,), 1.0), sigma_t=jnp.full((n,), 1.2),
+                   charge=jnp.full((n,), charge))
+
+
+class TestCounterHashRNG:
+    """The portable (interpret-mode) half of the in-kernel RNG."""
+
+    def test_uniform_bits_cover_unit_interval(self):
+        u = np.asarray(uniform_from_bits(hash_u32(
+            jnp.arange(1 << 14, dtype=jnp.uint32))))
+        assert 0.0 <= u.min() and u.max() < 1.0
+        assert abs(u.mean() - 0.5) < 0.01
+        assert abs(u.std() - np.sqrt(1 / 12)) < 0.01
+
+    def test_counter_normals_are_standard(self):
+        z = np.asarray(counter_normals(
+            jnp.uint32(123), jnp.uint32(456), jnp.uint32(789),
+            jnp.arange(1 << 14, dtype=jnp.uint32)))
+        assert abs(z.mean()) < 0.03
+        assert abs(z.std() - 1.0) < 0.03
+        # no serial correlation between adjacent counters
+        assert abs(np.corrcoef(z[:-1], z[1:])[0, 1]) < 0.05
+
+    def test_streams_are_independent(self):
+        cnt = jnp.arange(1 << 12, dtype=jnp.uint32)
+        z1 = np.asarray(counter_normals(jnp.uint32(1), jnp.uint32(2),
+                                        jnp.uint32(3), cnt))
+        z2 = np.asarray(counter_normals(jnp.uint32(1), jnp.uint32(2),
+                                        jnp.uint32(4), cnt))
+        assert abs(np.corrcoef(z1, z2)[0, 1]) < 0.05
+
+
+class TestFusedFluctuation:
+    def test_statistical_equivalence_with_fluctuate_counter(self):
+        """Per-patch sums from the in-kernel RNG match fluctuate_counter's
+        mean and variance (the ISSUE-3 acceptance contract)."""
+        depos = lattice_depos()
+        n = depos.n
+        pw, pt = CFG.patch_wires, CFG.patch_ticks
+        w0, t0 = depo_patch_origin(depos, CFG)
+        w0h, t0h = np.asarray(w0), np.asarray(t0)
+        patches, _, _ = rasterize(depos, CFG)
+
+        fused_sums, ref_sums = [], []
+        for s in range(16):
+            key = jax.random.key(100 + s)
+            g = np.asarray(simulate_charge_grid(depos, CFG, tw=32, tt=128,
+                                                key=key))
+            fused_sums.extend(
+                g[w0h[i]:w0h[i] + pw, t0h[i]:t0h[i] + pt].sum()
+                for i in range(n))
+            fl = fluctuate_counter(key, patches, depos.charge)
+            ref_sums.extend(np.asarray(fl.sum(axis=(1, 2))))
+        fused = np.array(fused_sums)
+        ref = np.array(ref_sums)
+        # matched means (both ~= charge, modulo the clamp-at-zero bias both
+        # share) and matched variances within sampling error
+        assert abs(fused.mean() - ref.mean()) / ref.mean() < 0.01
+        assert 0.7 < fused.std() / ref.std() < 1.4
+        # and it really fluctuates: far from the zero-variance mean field
+        assert fused.std() > 10.0
+
+    def test_same_key_bitwise_reproducible_different_keys_differ(self):
+        depos = lattice_depos()
+        k1, k2 = jax.random.key(1), jax.random.key(2)
+        a = np.asarray(simulate_charge_grid(depos, CFG, tw=32, tt=128, key=k1))
+        b = np.asarray(simulate_charge_grid(depos, CFG, tw=32, tt=128, key=k1))
+        c = np.asarray(simulate_charge_grid(depos, CFG, tw=32, tt=128, key=k2))
+        assert np.array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+    def test_no_key_keeps_mean_field_behavior(self):
+        """key=None reproduces the original deterministic kernel exactly."""
+        cfg = dataclasses.replace(CFG, fluctuate=False)
+        depos = lattice_depos()
+        g = np.asarray(simulate_charge_grid(depos, cfg, tw=32, tt=128))
+        r = np.asarray(simulate_charge_grid_ref(depos, cfg))
+        np.testing.assert_allclose(g, r, rtol=1e-5, atol=5e-2)
+
+    def test_fluctuation_stays_within_patch_support(self):
+        """Pixels outside every patch support stay exactly zero — the
+        fluctuation term has zero variance where the mean is zero."""
+        depos = lattice_depos()
+        pw, pt = CFG.patch_wires, CFG.patch_ticks
+        w0, t0 = depo_patch_origin(depos, CFG)
+        g = np.asarray(simulate_charge_grid(depos, CFG, tw=32, tt=128,
+                                            key=jax.random.key(3)))
+        mask = np.zeros_like(g, dtype=bool)
+        for i in range(depos.n):
+            mask[int(w0[i]):int(w0[i]) + pw, int(t0[i]):int(t0[i]) + pt] = True
+        assert (g[~mask] == 0.0).all()
+        assert (g >= 0.0).all()

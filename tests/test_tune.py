@@ -14,7 +14,8 @@ import pytest
 from repro import tune
 from repro.config import LArTPCConfig
 from repro.core.depo import DepoSet, generate_depos
-from repro.core.fft_conv import fft_convolve_fft2, fft_convolve_rfft2
+from repro.core.fft_conv import (fft_convolve, fft_convolve_fft2,
+                                 fft_convolve_rfft2)
 from repro.core.pipeline import (charge_grid_fused, charge_grid_unfused,
                                  make_sim_fn, simulate_fig4)
 from repro.core.rasterize import rasterize
@@ -23,10 +24,12 @@ from repro.core.scatter import scatter_add
 
 CFG = LArTPCConfig(num_wires=96, num_ticks=768, num_depos=64)
 
-#: fake timings (seconds) — pallas is made the deterministic winner on
-#: purpose: the wall clock must play no part under an injected timer
+#: fake timings (seconds) — pallas / fused_pallas are made the deterministic
+#: winners on purpose: the wall clock must play no part under an injected timer
 FAKE_TIMES = {"xla": 3.0, "sort_segment": 2.0, "pallas": 1.0,
-              "unfused": 2.0, "fused_pallas": 1.0, "rfft2": 1.0, "fft2": 2.0}
+              "pallas_compact": 1.5,
+              "unfused": 2.0, "unfused_bf16": 2.5, "fused_pallas": 1.0,
+              "fused_pallas_compact": 1.5, "rfft2": 1.0, "fft2": 2.0}
 
 
 def fake_timer(calls):
@@ -57,9 +60,10 @@ class TestRegistry:
         assert set(tune.list_ops()) >= {"scatter_add", "charge_grid",
                                         "fft_convolve"}
         assert set(tune.strategies("scatter_add")) == {
-            "xla", "sort_segment", "pallas"}
+            "xla", "sort_segment", "pallas", "pallas_compact"}
         assert set(tune.strategies("charge_grid")) == {
-            "unfused", "fused_pallas"}
+            "unfused", "unfused_bf16", "fused_pallas",
+            "fused_pallas_compact"}
         assert set(tune.strategies("fft_convolve")) == {"rfft2", "fft2"}
 
     def test_unknown_names_raise_with_known_list(self):
@@ -68,11 +72,19 @@ class TestRegistry:
         with pytest.raises(KeyError, match="known"):
             tune.strategies("matmul")
 
-    def test_availability_fused_requires_no_fluctuation(self):
+    def test_availability_fused_competes_in_default_physics_config(self):
+        """In-kernel counter RNG lifts the old fluctuate=False restriction:
+        fused candidates are available under the default (counter) config and
+        only the irreproducible pre-computed pool stream excludes them."""
         shape = tune.op_shape("charge_grid", CFG)
-        ctx = tune.make_context(CFG, shape)  # CFG.fluctuate=True
-        assert "fused_pallas" not in tune.available_strategies(
-            "charge_grid", ctx)
+        ctx = tune.make_context(CFG, shape)  # fluctuate=True, counter RNG
+        avail = tune.available_strategies("charge_grid", ctx)
+        assert {"fused_pallas", "fused_pallas_compact"} <= set(avail)
+        pooled = dataclasses.replace(CFG, rng_strategy="pool")
+        ctx = tune.make_context(pooled, shape)
+        avail = tune.available_strategies("charge_grid", ctx)
+        assert "fused_pallas" not in avail
+        assert "fused_pallas_compact" not in avail
         quiet = dataclasses.replace(CFG, fluctuate=False)
         ctx = tune.make_context(quiet, shape)
         assert "fused_pallas" in tune.available_strategies("charge_grid", ctx)
@@ -99,7 +111,8 @@ class TestAutotuner:
                          timer=fake_timer(calls))
         assert d.strategy == "pallas"      # smallest fake time, not wall time
         assert d.source == "tuned"
-        assert set(calls) == {"xla", "sort_segment", "pallas"}
+        assert set(calls) == {"xla", "sort_segment", "pallas",
+                              "pallas_compact"}
 
     def test_cache_roundtrip_second_call_hits_disk(self, tmp_path):
         path = str(tmp_path / "cache.json")
@@ -145,7 +158,9 @@ class TestAutotuner:
                                        timer=fake_timer([]))
         assert resolved.scatter_strategy == "pallas"   # fake-timer winner
         assert resolved.fft_strategy == "rfft2"
-        assert resolved.charge_grid_strategy == "unfused"  # fluctuate=True
+        # fused competes (and fake-wins) even with fluctuate=True: the
+        # in-kernel counter RNG lifted the old exclusion
+        assert resolved.charge_grid_strategy == "fused_pallas"
         # defaults-only resolution (no tuning, no cache entry)
         resolved2 = tune.resolve_config(
             cfg, cache=tune.TuneCache(str(tmp_path / "empty.json")))
@@ -169,21 +184,22 @@ class TestAutotuner:
         assert np.array_equal(np.asarray(out), np.asarray(ref))
 
     def test_cached_winner_ignored_when_predicate_fails(self, tmp_path):
-        """A fused_pallas charge_grid winner tuned under a no-fluctuation
-        config must NOT be served from cache to a config that needs
-        fluctuation — the key omits predicate inputs like `fluctuate`."""
+        """A fused_pallas charge_grid winner tuned under the counter-RNG
+        config must NOT be served from cache to a pool-RNG config (whose
+        pre-computed stream the kernel cannot reproduce) — the cache key
+        omits predicate inputs like `rng_strategy`."""
         cache = tune.TuneCache(str(tmp_path / "cache.json"))
-        quiet = dataclasses.replace(CFG, fluctuate=False,
-                                    charge_grid_strategy="auto")
-        d = tune.tune_op("charge_grid", quiet, cache=cache,
+        counter = dataclasses.replace(CFG, charge_grid_strategy="auto")
+        d = tune.tune_op("charge_grid", counter, cache=cache,
                          timer=fake_timer([]))
         assert d.strategy == "fused_pallas"              # fake-timer winner
-        noisy = dataclasses.replace(CFG, charge_grid_strategy="auto")
-        d2 = tune.resolve("charge_grid", noisy, cache=cache)
+        pooled = dataclasses.replace(CFG, rng_strategy="pool",
+                                     charge_grid_strategy="auto")
+        d2 = tune.resolve("charge_grid", pooled, cache=cache)
         assert d2.strategy == "unfused"                  # not the stale hit
         assert d2.source == "default"
-        # the no-fluctuation config still gets its cached winner
-        d3 = tune.resolve("charge_grid", quiet, cache=cache)
+        # the counter-RNG config still gets its cached winner
+        d3 = tune.resolve("charge_grid", counter, cache=cache)
         assert d3.strategy == "fused_pallas" and d3.cache_hit
 
 
@@ -227,10 +243,78 @@ class TestStrategyEquivalence:
         b = np.asarray(charge_grid_fused(key, depos, cfg))
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=5e-2)
 
-    def test_fused_raises_when_fluctuation_requested(self):
+    def test_all_charge_grid_strategies_agree_without_fluctuation(self):
+        """Every registered candidate (incl. compact and bf16 variants)
+        produces the same grid when fluctuation is off."""
+        cfg = dataclasses.replace(CFG, fluctuate=False)
+        depos = generate_depos(jax.random.key(7), cfg, 96)
+        key = jax.random.key(8)
+        ref = np.asarray(charge_grid_unfused(key, depos, cfg))
+        for name, strat in tune.strategies("charge_grid").items():
+            got = np.asarray(strat.fn(key, depos, cfg, None))
+            tol = dict(rtol=1e-2, atol=2e1) if "bf16" in name else dict(
+                rtol=1e-5, atol=5e-2)
+            np.testing.assert_allclose(got, ref, err_msg=name, **tol)
+
+    def test_fused_compact_matches_dense_bitwise_with_fluctuation(self):
+        """Compaction preserves global tile ids, hence RNG streams: the
+        compacted fused grid equals the dense fused grid BIT FOR BIT even
+        with in-kernel fluctuation enabled."""
+        from repro.core.pipeline import charge_grid_fused_compact
+
+        depos = generate_depos(jax.random.key(9), CFG, 128)
+        key = jax.random.key(10)
+        dense = np.asarray(charge_grid_fused(key, depos, CFG))
+        compact = np.asarray(charge_grid_fused_compact(key, depos, CFG))
+        assert np.array_equal(dense, compact)
+
+    def test_fused_raises_only_for_pool_rng(self):
+        """The in-kernel RNG covers counter fluctuation; only the paper's
+        pre-computed pool stream is irreproducible in kernel and rejected."""
         depos = generate_depos(jax.random.key(4), CFG, 8)
-        with pytest.raises(ValueError, match="fluctuation"):
-            charge_grid_fused(jax.random.key(0), depos, CFG)
+        pooled = dataclasses.replace(CFG, rng_strategy="pool")
+        with pytest.raises(ValueError, match="pool"):
+            charge_grid_fused(jax.random.key(0), depos, pooled)
+        # the default counter config runs (and fluctuates: grid != mean grid)
+        quiet = dataclasses.replace(CFG, fluctuate=False)
+        mean = np.asarray(charge_grid_fused(jax.random.key(0), depos, quiet))
+        fluct = np.asarray(charge_grid_fused(jax.random.key(0), depos, CFG))
+        assert not np.array_equal(mean, fluct)
+        assert abs(fluct.sum() - mean.sum()) / mean.sum() < 0.05
+
+
+class TestFFTDispatch:
+    """ISSUE-3 satellite: every concrete name routes through the registry."""
+
+    def test_unknown_strategy_raises_value_error_with_candidates(self):
+        resp = make_response(CFG)
+        grid = jnp.zeros((CFG.num_wires, CFG.num_ticks))
+        with pytest.raises(ValueError, match=r"fftw.*rfft2"):
+            fft_convolve(grid, resp, "fftw")
+
+    @pytest.mark.parametrize("name", ["rfft2", "fft2"])
+    def test_concrete_names_route_through_registry(self, name, monkeypatch):
+        """The old dispatch short-circuited 'rfft2' past the registry; now a
+        registry override is honored for every concrete name."""
+        from repro.tune import registry as reg
+
+        calls = []
+        orig = reg.get_strategy("fft_convolve", name)
+
+        def spy(grid, resp):
+            calls.append(name)
+            return orig.fn(grid, resp)
+
+        monkeypatch.setitem(reg._OPS["fft_convolve"], name,
+                            dataclasses.replace(orig, fn=spy))
+        resp = make_response(CFG)
+        grid = jax.random.uniform(jax.random.key(0),
+                                  (CFG.num_wires, CFG.num_ticks))
+        out = fft_convolve(grid, resp, name)
+        assert calls == [name]
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(orig.fn(grid, resp)),
+                                   rtol=1e-6)
 
 
 class TestPipelineIntegration:
