@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV lines. Mapping to the paper:
   rasterization -> Table 2 (+ Table 3 portability note)
   scatter       -> Fig. 5 (scatter-add strategy scaling)
   pipeline      -> Fig. 3 vs Fig. 4 strategies (the headline comparison)
+  stages        -> per-stage cost board (the papers' stage tables)
   fft           -> §5 "FT" stage
   tune          -> per-backend strategy board (registry + autotuner winners)
   lm_step       -> host-framework sanity timings for the 10 assigned archs
@@ -16,11 +17,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import fft, lm_step, pipeline, rasterization, scatter, tune
+    from benchmarks import (fft, lm_step, pipeline, rasterization, scatter,
+                            stages, tune)
     from benchmarks.common import write_json
 
     print("name,us_per_call,derived")
-    for mod in [rasterization, scatter, pipeline, fft, tune, lm_step]:
+    for mod in [rasterization, scatter, pipeline, stages, fft, tune, lm_step]:
         try:
             mod.main()
         except Exception:  # noqa: BLE001 — keep the harness going

@@ -1,0 +1,111 @@
+"""Per-stage timing board — the papers' stage-cost tables on our backends.
+
+The source paper (Table 2) and its OpenMP/SYCL follow-ups report *per-stage*
+cost — drift, rasterize/scatter, convolve, noise, digitize — because the
+stage profile is what picks the next porting target. The stage graph makes
+that measurement structural: every stage boundary is a named
+instrumentation point, so this board is just ``SimGraph.timed``.
+
+  fig4    : single-event graph, physical-depo input (drift stage does real
+            transport work).
+  batched : the same graph vmapped over E events (the multi-event engine's
+            device program), per-stage.
+
+``python benchmarks/stages.py`` runs the smoke config and writes
+BENCH_stages.json; ``--full`` adds the MicroBooNE-scale config (minutes on
+CPU). Stage timings are measured with per-stage jit + blocking boundaries,
+so their sum is an upper bound on the fused end-to-end program — the
+``*_total_fused`` record reports the real fused cost for comparison.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import emit, time_fn, write_json
+from repro.config import LArTPCConfig, get_config
+from repro.core.batch import event_keys
+from repro.core.depo import generate_physical_depos
+from repro.core.response import make_response
+from repro.core.stages import build_sim_graph
+from repro.tune import resolve_config
+
+
+def stage_board(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
+    """Single-event per-stage board (the fig4 path) on physical depos."""
+    cfg = resolve_config(cfg)
+    graph = build_sim_graph(cfg, make_response(cfg))
+    key = jax.random.key(0)
+    pdepos = generate_physical_depos(key, cfg)
+    _, timings = graph.timed(key, pdepos, iters=iters)
+    total = sum(timings.values())
+    for name, sec in timings.items():
+        emit(f"stages/fig4_{tag}_{name}", sec,
+             f"frac={sec / total:.3f};n={cfg.num_depos}")
+    fused = jax.jit(graph.run)
+    t = time_fn(lambda: fused(key, pdepos).adc, iters=iters)
+    emit(f"stages/fig4_{tag}_total_fused", t,
+         f"stage_sum_us={total * 1e6:.1f};n={cfg.num_depos}")
+
+
+def batched_stage_board(cfg: LArTPCConfig, tag: str, e_sz: int = 4,
+                        iters: int = 3) -> None:
+    """Per-stage board of the vmapped multi-event engine (E events/launch)."""
+    cfg = resolve_config(cfg)
+    graph = build_sim_graph(cfg, make_response(cfg))
+    key = jax.random.key(0)
+    events = [generate_physical_depos(jax.random.fold_in(key, ev), cfg)
+              for ev in range(e_sz)]
+    # pack the (x, y, z, t, q) physical leaves into one (E, N) pytree; the
+    # events share a fixed depo count, so no padding is needed here
+    batch = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *events)
+    keys = event_keys(key, range(e_sz))
+    _, timings = graph.timed(keys, batch, iters=iters, batched=True)
+    total = sum(timings.values())
+    n = e_sz * cfg.num_depos
+    for name, sec in timings.items():
+        emit(f"stages/batched_{tag}_E{e_sz}_{name}", sec,
+             f"frac={sec / total:.3f};events={e_sz};depos={n}")
+    fused = jax.jit(jax.vmap(graph.run))
+    t = time_fn(lambda: fused(keys, batch).adc, iters=iters)
+    emit(f"stages/batched_{tag}_E{e_sz}_total_fused", t,
+         f"stage_sum_us={total * 1e6:.1f};events={e_sz};"
+         f"depos_per_s={n / t:.3g}")
+
+
+def detector_frame_board(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
+    """Same graph fed already-drifted depos: the drift stage passes through,
+    so its row should read ~0 — evidence the stage only costs when it works.
+    """
+    from repro.core.depo import generate_depos
+
+    cfg = resolve_config(cfg)
+    graph = build_sim_graph(cfg, make_response(cfg))
+    key = jax.random.key(0)
+    depos = generate_depos(key, cfg)
+    _, timings = graph.timed(key, depos, iters=iters)
+    for name, sec in timings.items():
+        emit(f"stages/fig4_{tag}_predrifted_{name}", sec, "")
+
+
+def main(full: bool = False):
+    smoke = get_config("lartpc-uboone", smoke=True)
+    stage_board(smoke, "smoke")
+    batched_stage_board(smoke, "smoke")
+    detector_frame_board(smoke, "smoke")
+    if full:
+        full_cfg = get_config("lartpc-uboone")
+        stage_board(full_cfg, "full", iters=1)
+        batched_stage_board(full_cfg, "full", e_sz=2, iters=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also board the full MicroBooNE-scale config")
+    ap.add_argument("--json", default="BENCH_stages.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(full=args.full)
+    print(f"wrote {write_json(args.json)}")

@@ -1,28 +1,48 @@
 """Multi-device LArTPC simulation: depo-parallel rasterization, reduce-scatter
-scatter-add, pencil-decomposed distributed FFT (8 forced host devices).
+scatter-add, pencil-decomposed distributed FFT — the distributed executor of
+the same SimGraph the single-event and batched paths run.
 
-    PYTHONPATH=src python examples/sim_distributed.py
+    PYTHONPATH=src python examples/sim_distributed.py [--devices N] [--smoke]
+
+Device count defaults to 8 forced host devices; ``--devices 2 --smoke`` is
+the CI distributed smoke (any even N or N=1 works).
 """
+import argparse
 import os
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=8,
+                help="forced host device count (even, or 1)")
+ap.add_argument("--smoke", action="store_true",
+                help="small grid/depo sizes (CI-friendly)")
+args = ap.parse_args()
 
-import jax
-import numpy as np
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={args.devices} "
+    + os.environ.get("XLA_FLAGS", ""))
 
-from repro.config import LArTPCConfig
-from repro.core.depo import generate_depos
-from repro.core.distributed import (make_distributed_sim, padded_grid_shape,
-                                    shard_depos)
-from repro.core.response import make_distributed_response
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
-cfg = LArTPCConfig(num_wires=256, num_ticks=1024, num_depos=4096,
-                   response_wires=11, response_ticks=64)
-mesh = jax.make_mesh((4, 2), ("data", "model"))
-print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+from repro.config import LArTPCConfig  # noqa: E402
+from repro.core.depo import generate_depos  # noqa: E402
+from repro.core.distributed import (make_distributed_sim,  # noqa: E402
+                                    padded_grid_shape, shard_depos)
+from repro.core.response import make_distributed_response  # noqa: E402
 
-w_pad, _, _ = padded_grid_shape(cfg, 8)
+if args.smoke:
+    cfg = LArTPCConfig(num_wires=128, num_ticks=512, num_depos=512,
+                       response_wires=11, response_ticks=64)
+else:
+    cfg = LArTPCConfig(num_wires=256, num_ticks=1024, num_depos=4096,
+                       response_wires=11, response_ticks=64)
+
+n_dev = len(jax.devices())
+shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
+mesh = jax.make_mesh(shape, ("data", "model"))
+print(f"mesh: {dict(mesh.shape)} over {n_dev} devices")
+
+w_pad, _, _ = padded_grid_shape(cfg, n_dev)
 resp = make_distributed_response(cfg, w_pad)
 key = jax.random.key(0)
 depos = generate_depos(key, cfg)
@@ -33,5 +53,8 @@ sim = make_distributed_sim(mesh, cfg, resp)
 adc = sim(key, sharded)
 print(f"ADC out: {adc.shape} {adc.dtype}, sharding {adc.sharding}")
 a = np.asarray(adc)[:cfg.num_wires]
+hit = (np.abs(a.astype(int) - int(cfg.adc_baseline)) > 5).sum()
 print(f"signal deviation max {np.abs(a - cfg.adc_baseline).max()} counts; "
-      f"{(np.abs(a.astype(int) - int(cfg.adc_baseline)) > 5).sum()} hit pixels")
+      f"{hit} hit pixels")
+assert hit > 0, "distributed sim produced an empty readout"
+print("OK")

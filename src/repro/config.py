@@ -153,6 +153,18 @@ class LArTPCConfig:
     drift_speed_mm_us: float = 1.6
     diffusion_long: float = 6.4    # mm^2/us-ish scaled
     diffusion_tran: float = 9.8
+    # drift-stage diffusion shaping: width = sqrt(2 D t_drift) / metric
+    #   * diffusion_scale + floor (floors keep patches resolvable; scale
+    #   maps the synthetic diffusion constants onto patch-sized widths)
+    diffusion_scale: float = 1e-2
+    sigma_w_floor: float = 0.6     # wire units
+    sigma_t_floor: float = 0.8     # tick units
+    # drift-stage charge physics; defaults reproduce the seed behavior
+    # (no attenuation, unit recombination survival)
+    electron_lifetime_us: float = 0.0   # 0 disables lifetime attenuation
+    recombination: float = 1.0          # flat recombination survival factor
+    # jnp: vectorized transport; auto: resolve via the strategy registry
+    drift_strategy: str = "jnp"
     nsigma: float = 3.0
     # electrons per depo (mean), fluctuation model
     electrons_per_depo: float = 5000.0

@@ -1,20 +1,30 @@
 """Core: the paper's contribution — LArTPC signal simulation, TPU-native.
 
-Pipeline (paper Eq. 1/2):
-    depos --rasterize--> patches --scatter-add--> S(t,x) --FFT conv--> M(t,x)
-    (+ shaped electronics noise, digitization)
+Stage chain (paper Eq. 1/2, composed as a ``SimGraph`` in ``stages.py``):
+    physical depos --drift--> depos --charge_grid--> S(t,x)
+        --convolve--> M(t,x) --noise--> + N(t,x) --digitize--> ADC(t,x)
 """
-from repro.core.depo import DepoSet, generate_depos
+from repro.core.depo import DepoSet, generate_depos, generate_physical_depos
+from repro.core.drift import PhysicalDepoSet, drift_depos
 from repro.core.response import DetectorResponse, make_response
+from repro.core.stages import SimGraph, SimOutput, SimState, Stage, build_sim_graph
 from repro.core.pipeline import simulate, make_sim_fn
 from repro.core.batch import (EventBatch, event_keys, make_batched_sim_fn,
                               pack_events, shard_events, simulate_events)
 
 __all__ = [
     "DepoSet",
+    "PhysicalDepoSet",
     "generate_depos",
+    "generate_physical_depos",
+    "drift_depos",
     "DetectorResponse",
     "make_response",
+    "SimGraph",
+    "SimOutput",
+    "SimState",
+    "Stage",
+    "build_sim_graph",
     "simulate",
     "make_sim_fn",
     "EventBatch",

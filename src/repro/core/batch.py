@@ -36,10 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import LArTPCConfig
-from repro.core import fluctuate as fl
 from repro.core.depo import DepoSet
-from repro.core.pipeline import SimOutput, simulate_fig4
 from repro.core.response import DetectorResponse, make_response
+from repro.core.stages import SimGraph, SimOutput, build_sim_graph
 from repro.parallel.sharding import current_mesh, logical, named_sharding
 
 
@@ -149,21 +148,21 @@ def event_keys(key: jax.Array, event_ids: Sequence[int]) -> jax.Array:
 
 def simulate_events(keys: jax.Array, batch: EventBatch, resp: DetectorResponse,
                     cfg: LArTPCConfig, pool: Optional[jax.Array] = None,
-                    add_noise: bool = True) -> SimOutput:
-    """fig4 for all E events in one program: vmap over the event axis.
+                    add_noise: bool = True,
+                    graph: Optional[SimGraph] = None) -> SimOutput:
+    """The canonical SimGraph for all E events in one program: vmap over the
+    event axis (the batched executor of ``repro.core.stages``).
 
     keys : (E,) PRNG keys (one per event — events stay independent).
     Returns a SimOutput whose leaves carry a leading event axis:
     adc (E, num_wires, num_ticks), etc.
     """
+    if graph is None:
+        graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
     depos = batch.depo_set()
     depos = jax.tree.map(lambda x: logical(x, ("events", None)), depos)
     keys = logical(keys, ("events",))
-
-    def one(k, d):
-        return simulate_fig4(k, d, resp, cfg, pool=pool, add_noise=add_noise)
-
-    out = jax.vmap(one)(keys, depos)
+    out = jax.vmap(graph.run)(keys, depos)
     return SimOutput(*(logical(x, ("events", None, None)) for x in out))
 
 
@@ -171,7 +170,8 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
                         resp: Optional[DetectorResponse] = None,
                         add_noise: bool = True, donate: bool = False):
     """jit'd ``sim(keys, batch) -> SimOutput`` closure (batched production
-    path — the event-level analogue of ``make_sim_fn``).
+    path — the vmap executor over the same ``SimGraph`` ``make_sim_fn``
+    runs single-event).
 
     ``"auto"`` strategy fields resolve here, before jit, so one fixed traced
     program serves the whole stream (see ``repro.tune``).
@@ -185,14 +185,12 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
 
     cfg = resolve_config(cfg)
     resp = resp if resp is not None else make_response(cfg)
-    pool = None
-    if cfg.rng_strategy == "pool":
-        pool = fl.make_pool(jax.random.key(1234))
+    # build_sim_graph supplies the standard RNG pool when cfg asks for it
+    graph = build_sim_graph(cfg, resp, add_noise=add_noise)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
     def sim(keys, batch: EventBatch) -> SimOutput:
-        return simulate_events(keys, batch, resp, cfg, pool=pool,
-                               add_noise=add_noise)
+        return simulate_events(keys, batch, resp, cfg, graph=graph)
 
     return sim
 

@@ -1,11 +1,13 @@
 """Energy depositions ("depos") — the input to the LArTPC signal simulation.
 
-A depo is a point charge deposit from a Geant4-tracked particle. During drift to
-the readout plane it becomes a 2-D Gaussian cloud (transverse × longitudinal
-diffusion, Fig. 2 of the paper). The real experiment feeds CORSIKA+Geant4 output
-through LArSoft; here ``generate_depos`` is the stand-in generator producing the
-same statistical shape: tracks of correlated depos with diffusion growing with
-drift distance.
+A depo is a point charge deposit from a Geant4-tracked particle. During drift
+to the readout plane it becomes a 2-D Gaussian cloud (transverse ×
+longitudinal diffusion, Fig. 2 of the paper). The real experiment feeds
+CORSIKA+Geant4 output through LArSoft; here ``generate_physical_depos`` is
+the stand-in generator producing the same statistical shape — tracks of
+correlated *physical* depos — and ``generate_depos`` is that generator plus
+the drift stage (``repro.core.drift``), which owns diffusion, lifetime
+attenuation, and recombination.
 """
 from __future__ import annotations
 
@@ -38,12 +40,19 @@ class DepoSet(NamedTuple):
         return self.wire.shape[0]
 
 
-def generate_depos(key: jax.Array, cfg: LArTPCConfig, n: int | None = None) -> DepoSet:
-    """Synthetic cosmic-ray-like depos: straight tracks through the volume.
+def generate_physical_depos(key: jax.Array, cfg: LArTPCConfig,
+                            n: int | None = None):
+    """Synthetic cosmic-ray-like *physical* depos: straight tracks through
+    the volume, in the anode drift frame (``repro.core.drift``).
 
-    Matches the paper's benchmark input statistically: ~100k depos from cosmic
-    tracks, diffusion widths set by drift distance.
+    Matches the paper's benchmark input statistically: ~100k depos from
+    cosmic tracks, deposited at trigger time (t=0) with drift times spanning
+    the readout window. Transport to ``(wire, tick)`` detector coordinates —
+    diffusion, lifetime attenuation, recombination — is the drift stage's
+    job, not the generator's.
     """
+    from repro.core.drift import PhysicalDepoSet
+
     n = n or cfg.num_depos
     n_tracks = max(1, n // 512)  # ~512 depos per track segment
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
@@ -63,27 +72,30 @@ def generate_depos(key: jax.Array, cfg: LArTPCConfig, n: int | None = None) -> D
     wires = jnp.clip(jnp.abs(wires), 0, cfg.num_wires - 1)
     ticks = jnp.clip(jnp.abs(ticks), 0, cfg.num_ticks - 1)
 
-    # diffusion grows like sqrt(drift distance); drift distance ~ tick
-    drift_us = ticks * cfg.tick_us
-    sigma_t = jnp.sqrt(2.0 * cfg.diffusion_long * drift_us) / (
-        cfg.drift_speed_mm_us * cfg.tick_us
-    ) * 1e-2 + 0.8
-    sigma_w = jnp.sqrt(2.0 * cfg.diffusion_tran * drift_us) / cfg.wire_pitch_mm * 1e-2 + 0.6
-    # clip so the nsigma extent fits inside the patch
-    sigma_w = jnp.clip(sigma_w, 0.3, (cfg.patch_wires / 2 - 1) / cfg.nsigma)
-    sigma_t = jnp.clip(sigma_t, 0.3, (cfg.patch_ticks / 2 - 1) / cfg.nsigma)
-
     # Landau-ish long-tailed charge per depo (lognormal)
     charge = cfg.electrons_per_depo * jnp.exp(
         0.3 * jax.random.normal(k4, (n,))
     )
-    return DepoSet(
-        wire=wires.astype(jnp.float32),
-        tick=ticks.astype(jnp.float32),
-        sigma_w=sigma_w.astype(jnp.float32),
-        sigma_t=sigma_t.astype(jnp.float32),
-        charge=charge.astype(jnp.float32),
+    return PhysicalDepoSet(
+        x=(ticks * cfg.tick_us).astype(jnp.float32),  # drift time [us]
+        y=wires.astype(jnp.float32),                  # wire-pitch units
+        z=jnp.zeros((n,), jnp.float32),
+        t=jnp.zeros((n,), jnp.float32),               # deposited at trigger
+        q=charge.astype(jnp.float32),
     )
+
+
+def generate_depos(key: jax.Array, cfg: LArTPCConfig, n: int | None = None) -> DepoSet:
+    """Physical depo generation + drift transport, as one detector DepoSet.
+
+    Thin wrapper: ``generate_physical_depos`` samples tracks, the drift
+    stage transports them to the readout plane. Bit-for-bit with the seed
+    repo's direct detector-frame generator at default physics
+    (``tests/test_drift.py`` pins this).
+    """
+    from repro.core.drift import transport
+
+    return transport(generate_physical_depos(key, cfg, n), cfg)
 
 
 def depo_patch_origin(depos: DepoSet, cfg: LArTPCConfig):

@@ -35,11 +35,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import LArTPCConfig
 from repro.core import fluctuate as fl
 from repro.core.depo import DepoSet
-from repro.core.fft_conv import digitize
 from repro.core.noise import noise_spectrum
 from repro.core.rasterize import rasterize
 from repro.core.response import DetectorResponse
 from repro.core.scatter import scatter_add
+from repro.core.stages import SimState, build_sim_graph
 
 
 def _round_up(x: int, m: int) -> int:
@@ -98,11 +98,18 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
     rfreq = resp.freq  # (w_pad, nfreq) complex64, precomputed
     namp = noise_spectrum(cfg)  # (nfreq,)
 
-    def local_pipeline(key, depos: DepoSet):
+    # The distributed executor runs the SAME SimGraph as the single-event
+    # and batched paths; only the collective-aware stages are overridden
+    # (charge_grid reduces across devices, convolve is the pencil FFT,
+    # noise draws per-device wire-local realizations). Drift and digitize
+    # are the stock stages — both are elementwise, so they shard freely.
+
+    def dist_charge_grid(state: SimState) -> SimState:
         # ---- rasterize + fluctuate (pure DP) ----
+        depos = state.depos
         patches, w0, t0 = rasterize(depos, cfg)
         if cfg.fluctuate and cfg.rng_strategy != "none":
-            kf = jax.random.fold_in(key, _flat_index(axes, mesh))
+            kf = jax.random.fold_in(state.key, _flat_index(axes, mesh))
             patches = fl.fluctuate_counter(kf, patches, depos.charge)
 
         # ---- scatter-add + reduction to wire-sharded grid ----
@@ -133,9 +140,11 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
                     mesh.shape[a], grid_local.shape[0] // mesh.shape[a], t_len)
                 grid_local = jax.lax.psum_scatter(
                     grid_local, a, scatter_dimension=0, tiled=False)
+        return state._replace(grid=grid_local)
 
+    def dist_convolve(state: SimState) -> SimState:
         # ---- pencil FFT: tick rFFT local -> transpose -> wire FFT ----
-        freq_t = jnp.fft.rfft(grid_local, axis=-1)          # (w_shard, nfreq)
+        freq_t = jnp.fft.rfft(state.grid, axis=-1)          # (w_shard, nfreq)
         freq_t = jnp.pad(freq_t, ((0, 0), (0, f_pad - nfreq)))
         # transpose: (w_shard, f_pad) -> gather wires / scatter freq
         blk = freq_t.reshape(w_shard, nshards, f_shard)
@@ -157,21 +166,31 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
         blk = _all_to_all_chain(blk, axes, mesh)
         freq_t = jnp.swapaxes(blk, 0, 1).reshape(w_shard, f_pad)[:, :nfreq]
         signal = jnp.fft.irfft(freq_t, n=t_len, axis=-1).real.astype(jnp.float32)
+        return state._replace(signal=signal)
 
-        # ---- noise + digitize (wire-local) ----
-        if add_noise:
-            kn = jax.random.fold_in(key, 77 + _flat_index(axes, mesh))
-            k1, k2 = jax.random.split(kn)
-            re = jax.random.normal(k1, (w_shard, nfreq))
-            im = jax.random.normal(k2, (w_shard, nfreq))
-            spec = (re + 1j * im) * namp[None, :] * 0.7071067811865476
-            noise = jnp.fft.irfft(spec, n=t_len, axis=-1).astype(jnp.float32)
-            signal = signal + noise / max(cfg.adc_per_electron, 1e-30)
-        return digitize(signal, cfg)
+    def dist_noise(state: SimState) -> SimState:
+        # ---- wire-local noise, per-device key schedule ----
+        kn = jax.random.fold_in(state.key, 77 + _flat_index(axes, mesh))
+        k1, k2 = jax.random.split(kn)
+        re = jax.random.normal(k1, (w_shard, nfreq))
+        im = jax.random.normal(k2, (w_shard, nfreq))
+        spec = (re + 1j * im) * namp[None, :] * 0.7071067811865476
+        noise = jnp.fft.irfft(spec, n=t_len, axis=-1).astype(jnp.float32)
+        return state._replace(
+            signal=state.signal + noise / max(cfg.adc_per_electron, 1e-30))
+
+    overrides = {"charge_grid": dist_charge_grid, "convolve": dist_convolve}
+    if add_noise:
+        overrides["noise"] = dist_noise
+    graph = build_sim_graph(cfg, resp, add_noise=add_noise,
+                            overrides=overrides)
+
+    def local_run(key, depos):
+        return graph.run(key, depos).adc
 
     depo_spec = DepoSet(*(P(axes) for _ in range(5)))
     fn = shard_map(
-        local_pipeline, mesh=mesh,
+        local_run, mesh=mesh,
         in_specs=(P(), depo_spec),
         out_specs=P(axes, None),
         check_rep=False,

@@ -12,17 +12,16 @@ Two strategies, mirroring the paper's Fig. 3 vs Fig. 4:
          (the depo arrays), one D2H (the ADC grid). The paper's proposed fix,
          implemented fully.
 
-The depos -> S(t,x) charge-grid stage is itself a registered hot op
-(``charge_grid`` in ``repro.tune``) with two candidates: the unfused
-rasterize -> fluctuate -> scatter chain, and the fused Pallas
-rasterize+scatter kernel (``repro.kernels.fused_sim``) in which patches
-never round-trip through HBM. ``make_sim_fn`` resolves any ``"auto"``
-strategy fields *before* jit so the traced program is fixed.
+The stage chain itself — ``drift -> charge_grid -> convolve -> noise ->
+digitize`` — lives in ``repro.core.stages`` as a ``SimGraph``; this module
+contributes the fig4 *executor* (``make_sim_fn`` = jit over the graph), the
+registered ``charge_grid`` strategy candidates, and the deliberately naive
+fig3 host loop. ``make_sim_fn`` resolves any ``"auto"`` strategy fields
+*before* jit so the traced program is fixed.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +35,14 @@ from repro.core.noise import simulate_noise
 from repro.core.rasterize import rasterize, rasterize_one
 from repro.core.response import DetectorResponse, make_response
 from repro.core.scatter import scatter_add
+from repro.core.stages import (SimOutput, build_sim_graph,
+                               compute_charge_grid)
 from repro.tune.registry import register_strategy, set_default
 
-
-class SimOutput(NamedTuple):
-    adc: jax.Array        # (num_wires, num_ticks) int16
-    signal: jax.Array     # (num_wires, num_ticks) float32 pre-digitization
-    charge_grid: jax.Array  # S(t,x) after scatter-add
+__all__ = [
+    "SimOutput", "compute_charge_grid", "simulate_fig3", "simulate_fig4",
+    "make_sim_fn", "simulate", "charge_grid_unfused",
+]
 
 
 def _fluctuate(key, patches, charge, cfg: LArTPCConfig, pool=None):
@@ -131,34 +131,22 @@ def charge_grid_fused_compact(key: jax.Array, depos: DepoSet,
 set_default("charge_grid", "unfused")
 
 
-def compute_charge_grid(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
-                        pool: Optional[jax.Array] = None) -> jax.Array:
-    """Dispatch depos -> S(t,x) through the registered strategy."""
-    from repro.tune import autotune, registry
-
-    strategy = cfg.charge_grid_strategy
-    if strategy == "auto":
-        strategy = autotune.resolve("charge_grid", cfg).strategy
-    return registry.get_strategy("charge_grid", strategy).fn(
-        key, depos, cfg, pool)
-
-
 # ---------------------------------------------------------------------------
 # Pipelines
 # ---------------------------------------------------------------------------
 
 
-def simulate_fig4(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
+def simulate_fig4(key: jax.Array, depos, resp: DetectorResponse,
                   cfg: LArTPCConfig, pool: Optional[jax.Array] = None,
                   add_noise: bool = True) -> SimOutput:
-    """The batched device-resident pipeline (paper Fig. 4). jit-able end to end."""
-    kf, kn = jax.random.split(key)
-    grid = compute_charge_grid(kf, depos, cfg, pool=pool)
-    signal = fft_convolve(grid, resp, cfg.fft_strategy)
-    if add_noise:
-        signal = signal + simulate_noise(kn, cfg) / jnp.maximum(
-            cfg.adc_per_electron, 1e-30)
-    return SimOutput(adc=digitize(signal, cfg), signal=signal, charge_grid=grid)
+    """The batched device-resident pipeline (paper Fig. 4). jit-able end to end.
+
+    One ``SimGraph.run`` of the canonical stage chain; ``depos`` may be a
+    detector-frame ``DepoSet`` or a physical ``PhysicalDepoSet`` (the drift
+    stage transports the latter).
+    """
+    graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
+    return graph.run(key, depos)
 
 
 def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
@@ -212,7 +200,8 @@ def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
 
 def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
                 add_noise: bool = True, donate: bool = False):
-    """Return a jit'd fig4 simulate(key, depos) closure (the production path).
+    """Return a jit'd simulate(key, depos) closure (the production path):
+    the single-event executor of the canonical ``SimGraph``.
 
     Any ``"auto"`` strategy fields resolve (tuning cache / backend default)
     here, before jit, so the traced program is fixed.
@@ -228,15 +217,9 @@ def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
 
     cfg = resolve_config(cfg)
     resp = resp if resp is not None else make_response(cfg)
-    pool = None
-    if cfg.rng_strategy == "pool":
-        pool = fl.make_pool(jax.random.key(1234))
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
-    def sim(key, depos: DepoSet) -> SimOutput:
-        return simulate_fig4(key, depos, resp, cfg, pool=pool, add_noise=add_noise)
-
-    return sim
+    # build_sim_graph supplies the standard RNG pool when cfg asks for it
+    graph = build_sim_graph(cfg, resp, add_noise=add_noise)
+    return jax.jit(graph.run, donate_argnums=(0, 1) if donate else ())
 
 
 def simulate(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,

@@ -1,0 +1,292 @@
+"""Stage-graph simulation core: one composable pipeline, many executors.
+
+The paper (and its OpenMP/SYCL follow-ups, arXiv:2203.02479 / 2304.01841)
+treats the LArTPC sim as a *chain of stages* — drift, rasterize/scatter
+("charge grid"), convolve, noise, digitize — whose per-stage cost profile
+drives every porting decision. This module makes that chain a first-class
+object instead of code duplicated across entry points:
+
+  Stage     : one named pipeline step — ``fn(SimState) -> SimState`` plus
+              the strategy-registry op key it dispatches (if any).
+  SimGraph  : an ordered tuple of stages with one executor (``run``), one
+              instrumentation point per stage boundary (``timed``), and
+              stage overrides (``replace``) for specialized executors.
+  SimState  : the pytree flowing between stages (keys, depos, grid,
+              signal, adc).
+
+All four production entry points execute the same graph object:
+
+  make_sim_fn           : jit(graph.run)                       (single event)
+  make_batched_sim_fn   : jit(vmap(graph.run))                 (event batch)
+  make_distributed_sim  : jit(shard_map(graph.run))            (multi-device,
+                          with charge_grid/convolve/noise stage overrides)
+  stream_simulate       : the double-buffered driver over make_batched_sim_fn
+
+so adding a stage (signal processing / deconvolution is next) or a strategy
+is a one-file change, and the per-stage timing boards the papers use to find
+the next bottleneck come for free (``benchmarks/stages.py``).
+
+RNG contract (bit-for-bit with the pre-graph code): the executor splits the
+event key once — ``kf, kn = split(key)`` — exactly as ``simulate_fig4``
+always did; stages draw from their assigned subkey. ``SimState.key`` keeps
+the *unsplit* event key for executors with their own derivation schedule
+(the distributed pipeline folds in a per-device index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet
+from repro.core.fft_conv import digitize, fft_convolve
+from repro.core.noise import simulate_noise
+from repro.core.response import DetectorResponse
+
+#: canonical stage order of the full simulation chain
+STAGE_ORDER = ("drift", "charge_grid", "convolve", "noise", "digitize")
+
+
+class SimOutput(NamedTuple):
+    adc: jax.Array        # (num_wires, num_ticks) int16
+    signal: jax.Array     # (num_wires, num_ticks) float32 pre-digitization
+    charge_grid: jax.Array  # S(t,x) after scatter-add
+
+
+class SimState(NamedTuple):
+    """The pytree a SimGraph threads through its stages.
+
+    ``depos`` may be a ``PhysicalDepoSet`` (drift transports it) or an
+    already-drifted ``DepoSet`` (drift passes it through) — the branch is
+    on pytree *structure*, resolved at trace time.
+    """
+
+    key: jax.Array                     # unsplit event key
+    kf: jax.Array                      # charge-grid subkey (fig4 schedule)
+    kn: jax.Array                      # noise subkey (fig4 schedule)
+    depos: Any                         # PhysicalDepoSet | DepoSet
+    grid: Optional[jax.Array] = None   # S(t,x) after charge_grid
+    signal: Optional[jax.Array] = None  # M(t,x) after convolve (+ noise)
+    adc: Optional[jax.Array] = None    # int16 after digitize
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One named pipeline step.
+
+    name : instrumentation-point name (timing boards key on it)
+    fn   : ``SimState -> SimState`` — reads its inputs from the state,
+           writes its outputs back
+    op   : strategy-registry hot-op key this stage dispatches through
+           (``repro.tune``), or None for fixed-function stages
+    """
+
+    name: str
+    fn: Callable[[SimState], SimState]
+    op: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SimGraph:
+    """An ordered stage chain with one executor for every launch mode."""
+
+    stages: Tuple[Stage, ...]
+
+    @property
+    def stage_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.stages)
+
+    def stage(self, name: str) -> Stage:
+        for s in self.stages:
+            if s.name == name:
+                return s
+        raise KeyError(f"no stage {name!r}; graph has {self.stage_names}")
+
+    def replace(self, **overrides: Callable[[SimState], SimState] | Stage
+                ) -> "SimGraph":
+        """A new graph with named stages overridden (the specialization
+        hook: the distributed executor swaps in collective-aware
+        charge_grid/convolve/noise implementations, scenario configs can
+        swap any stage without touching the executor)."""
+        unknown = set(overrides) - set(self.stage_names)
+        if unknown:
+            raise KeyError(f"unknown stages {sorted(unknown)}; "
+                           f"graph has {self.stage_names}")
+        stages = tuple(
+            (overrides[s.name] if isinstance(overrides.get(s.name), Stage)
+             else dataclasses.replace(s, fn=overrides[s.name]))
+            if s.name in overrides else s
+            for s in self.stages)
+        return SimGraph(stages=stages)
+
+    # -- execution ----------------------------------------------------------
+
+    def init_state(self, key: jax.Array, depos) -> SimState:
+        kf, kn = jax.random.split(key)
+        return SimState(key=key, kf=kf, kn=kn, depos=depos)
+
+    def output(self, state: SimState) -> SimOutput:
+        return SimOutput(adc=state.adc, signal=state.signal,
+                         charge_grid=state.grid)
+
+    def run_state(self, state: SimState) -> SimState:
+        for stage in self.stages:
+            state = stage.fn(state)
+        return state
+
+    def run(self, key: jax.Array, depos) -> SimOutput:
+        """Execute the full chain for one event. jit/vmap/shard_map-able."""
+        return self.output(self.run_state(self.init_state(key, depos)))
+
+    # -- instrumentation ----------------------------------------------------
+
+    def timed(self, key: jax.Array, depos, *, warmup: int = 1,
+              iters: int = 3, batched: bool = False,
+              ) -> Tuple[SimOutput, Dict[str, float]]:
+        """Run stage-by-stage, timing each stage boundary on device.
+
+        Each stage jits separately and blocks between stages, so the state
+        materializes at every boundary — per-stage cost the way the papers'
+        stage tables report it (the fused end-to-end program can be faster;
+        time ``jit(graph.run)`` for that number). ``batched=True`` vmaps
+        every stage over a leading event axis of ``key``/``depos``.
+
+        Returns (final SimOutput, {stage name: median seconds}).
+        """
+        init = jax.vmap(self.init_state) if batched else self.init_state
+        state = jax.jit(init)(key, depos)
+        jax.block_until_ready(state)
+        timings: Dict[str, float] = {}
+        for stage in self.stages:
+            fn = jax.jit(jax.vmap(stage.fn) if batched else stage.fn)
+            out = fn(state)
+            jax.block_until_ready(out)  # compile + warm
+            for _ in range(max(warmup - 1, 0)):
+                jax.block_until_ready(fn(state))
+            times = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(state))
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            timings[stage.name] = times[len(times) // 2]
+            state = out
+        return self.output(state), timings
+
+
+# ---------------------------------------------------------------------------
+# Stage factories — the default (single-device fig4) implementations
+# ---------------------------------------------------------------------------
+
+
+def drift_stage(cfg: LArTPCConfig) -> Stage:
+    """Transport physical depos to the readout plane; pass through depos
+    that already arrived (an input DepoSet), so every executor accepts both
+    physical- and detector-frame input."""
+    from repro.core.drift import PhysicalDepoSet, transport
+
+    def fn(state: SimState) -> SimState:
+        if isinstance(state.depos, PhysicalDepoSet):
+            return state._replace(depos=transport(state.depos, cfg))
+        return state
+
+    return Stage("drift", fn, op="drift")
+
+
+def compute_charge_grid(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
+                        pool: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch depos -> S(t,x) through the registered strategy."""
+    from repro.tune import autotune, registry
+
+    strategy = cfg.charge_grid_strategy
+    if strategy == "auto":
+        strategy = autotune.resolve("charge_grid", cfg).strategy
+    return registry.get_strategy("charge_grid", strategy).fn(
+        key, depos, cfg, pool)
+
+
+def charge_grid_stage(cfg: LArTPCConfig,
+                      pool: Optional[jax.Array] = None) -> Stage:
+    """depos -> S(t,x): rasterize + fluctuate + scatter-add (or the fused
+    kernel), dispatched through the ``charge_grid`` strategy registry."""
+
+    def fn(state: SimState) -> SimState:
+        return state._replace(
+            grid=compute_charge_grid(state.kf, state.depos, cfg, pool=pool))
+
+    return Stage("charge_grid", fn, op="charge_grid")
+
+
+def convolve_stage(cfg: LArTPCConfig, resp: DetectorResponse) -> Stage:
+    """S(t,x) -> M(t,x): frequency-domain convolution with the detector
+    response, dispatched through the ``fft_convolve`` strategy registry."""
+
+    def fn(state: SimState) -> SimState:
+        return state._replace(
+            signal=fft_convolve(state.grid, resp, cfg.fft_strategy))
+
+    return Stage("convolve", fn, op="fft_convolve")
+
+
+def noise_stage(cfg: LArTPCConfig) -> Stage:
+    """Add frequency-shaped electronics noise to the signal."""
+
+    def fn(state: SimState) -> SimState:
+        noise = simulate_noise(state.kn, cfg) / jnp.maximum(
+            cfg.adc_per_electron, 1e-30)
+        return state._replace(signal=state.signal + noise)
+
+    return Stage("noise", fn)
+
+
+def digitize_stage(cfg: LArTPCConfig) -> Stage:
+    """M(t,x) -> int16 ADC counts."""
+
+    def fn(state: SimState) -> SimState:
+        return state._replace(adc=digitize(state.signal, cfg))
+
+    return Stage("digitize", fn)
+
+
+def build_sim_graph(cfg: LArTPCConfig, resp: DetectorResponse,
+                    pool: Optional[jax.Array] = None, add_noise: bool = True,
+                    overrides: Optional[Dict[str, Callable | Stage]] = None,
+                    ) -> SimGraph:
+    """Assemble the canonical ``drift -> charge_grid -> convolve -> noise ->
+    digitize`` chain. This is the ONLY place the stage order is written down;
+    every executor (single / batched / distributed / streaming) runs the
+    graph this returns.
+
+    ``add_noise=False`` drops the noise stage (rather than running it as an
+    identity), so timing boards and traced programs only contain real work.
+    ``overrides`` maps stage names to replacement fns/Stages (see
+    ``SimGraph.replace``).
+
+    When the config asks for the paper-faithful ``pool`` fluctuation stream
+    and no pool is passed, the standard pre-computed pool is built here —
+    every executor (and the timing boards) gets it without its own wiring.
+    (Skipped when ``overrides`` replaces the charge_grid stage: the
+    replacement owns its fluctuation scheme, e.g. the distributed
+    executor's counter RNG.)
+    """
+    if (pool is None and cfg.fluctuate and cfg.rng_strategy == "pool"
+            and not (overrides and "charge_grid" in overrides)):
+        from repro.core import fluctuate as fl
+
+        pool = fl.make_pool(jax.random.key(1234))
+    stages = [
+        drift_stage(cfg),
+        charge_grid_stage(cfg, pool=pool),
+        convolve_stage(cfg, resp),
+    ]
+    if add_noise:
+        stages.append(noise_stage(cfg))
+    stages.append(digitize_stage(cfg))
+    graph = SimGraph(stages=tuple(stages))
+    if overrides:
+        graph = graph.replace(**overrides)
+    return graph

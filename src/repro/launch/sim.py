@@ -2,13 +2,15 @@
 
     python -m repro.launch.sim [--smoke] [--events N] [--batch-events E]
                                [--pipeline fig3|fig4] [--tune] [--retune]
-                               [--strategy <scatter>] [--set key=value ...]
+                               [--strategy <scatter>] [--stage-board]
+                               [--set key=value ...]
 
-``--tune`` autotunes every registered hot op (scatter-add, charge-grid,
-FFT-convolve) on the live backend at this config's shape before running,
-caching winners to disk; a repeated run reports cache hits instead of
-re-measuring (see docs/tuning.md). ``--strategy`` forces the scatter-add
-strategy, overriding both the config and the tuner.
+``--tune`` autotunes every registered hot op (drift, scatter-add,
+charge-grid, FFT-convolve) on the live backend at this config's shape before
+running, caching winners to disk; a repeated run reports cache hits instead
+of re-measuring (see docs/tuning.md). ``--strategy`` forces the scatter-add
+strategy, overriding both the config and the tuner. ``--stage-board`` prints
+per-stage device timings (the papers' stage-cost table) before streaming.
 
 The fig4 path streams *batches* of events through one vmap'd device program
 (``repro.core.batch``): while batch b computes on device, the host generates
@@ -38,7 +40,9 @@ def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
                     seed: int = 0, sim: Optional[Callable] = None,
                     pad_to: Optional[int] = None,
                     on_batch: Optional[Callable] = None) -> dict:
-    """Double-buffered streaming driver for the batched fig4 engine.
+    """Double-buffered streaming driver for the batched engine — the
+    streaming executor of the canonical ``SimGraph`` (its device program is
+    ``make_batched_sim_fn``'s jit'd vmap over ``SimGraph.run``).
 
     Pipelined schedule per step b:
       1. host generates + packs batch b            (overlaps device batch b-1)
@@ -138,6 +142,10 @@ def main():
     ap.add_argument("--strategy", default=None,
                     help="force the scatter-add strategy (see repro.tune; "
                          "'auto' resolves via the tuning cache)")
+    ap.add_argument("--stage-board", action="store_true",
+                    help="print per-stage device timings for this config "
+                         "before streaming (drift/charge_grid/convolve/"
+                         "noise/digitize)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
@@ -165,6 +173,20 @@ def main():
             raise SystemExit(f"unknown --strategy {args.strategy!r}; "
                              f"known: {known}")
         cfg = apply_overrides(cfg, {"scatter_strategy": args.strategy})
+
+    if args.stage_board:
+        from repro.core import build_sim_graph, generate_physical_depos
+        from repro.core.response import make_response
+        from repro.tune import resolve_config
+
+        rcfg = resolve_config(cfg)
+        graph = build_sim_graph(rcfg, make_response(rcfg))
+        key = jax.random.key(args.seed)
+        _, timings = graph.timed(key, generate_physical_depos(key, rcfg))
+        total = sum(timings.values())
+        for name, sec in timings.items():
+            print(f"stage {name:<12} {sec * 1e3:8.2f} ms "
+                  f"({100 * sec / total:5.1f}%)")
 
     if cfg.pipeline == "fig3":
         _run_fig3(cfg, args.events, args.seed)

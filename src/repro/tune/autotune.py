@@ -39,6 +39,7 @@ CACHE_ENV = "REPRO_TUNE_CACHE"
 
 #: op -> the config field that names its strategy
 OP_FIELDS: Dict[str, str] = {
+    "drift": "drift_strategy",
     "scatter_add": "scatter_strategy",
     "charge_grid": "charge_grid_strategy",
     "fft_convolve": "fft_strategy",
@@ -113,6 +114,8 @@ def cache_key(
 
 def op_shape(op: str, cfg) -> Dict[str, int]:
     """The problem dims op's tuning decision depends on."""
+    if op == "drift":
+        return {"num_depos": cfg.num_depos}
     if op in ("scatter_add", "charge_grid"):
         return {
             "num_depos": cfg.num_depos,
@@ -172,6 +175,21 @@ def _problem_depos(cfg, sample_depos: Optional[int]):
     return generate_depos(jax.random.key(0), cfg, n)
 
 
+def _drift_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
+    from repro.core.depo import generate_physical_depos
+
+    n = sample_depos or cfg.num_depos
+    pdepos = generate_physical_depos(jax.random.key(0), cfg, n)
+    jax.block_until_ready(pdepos)
+
+    def make(strat):
+        f = jax.jit(functools.partial(strat.fn, cfg=cfg))
+        return lambda: f(pdepos)
+
+    avail = registry.available_strategies("drift", ctx)
+    return {name: make(s) for name, s in avail.items()}
+
+
 def _scatter_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
     from repro.core.rasterize import rasterize
 
@@ -216,6 +234,7 @@ def _fft_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
 
 
 _PROBLEMS = {
+    "drift": _drift_problem,
     "scatter_add": _scatter_problem,
     "charge_grid": _charge_grid_problem,
     "fft_convolve": _fft_problem,

@@ -1,0 +1,187 @@
+"""Drift-stage tests: transport physics + seed bit-identity of the wrapper."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LArTPCConfig
+from repro.core.depo import DepoSet, generate_depos, generate_physical_depos
+from repro.core.drift import PhysicalDepoSet, drift_depos, transport
+
+CFG = LArTPCConfig(num_wires=64, num_ticks=256, num_depos=128,
+                   response_wires=11, response_ticks=48)
+
+
+def seed_generate_depos(key, cfg, n=None):
+    """The seed repo's direct detector-frame generator, verbatim — the
+    reference for the satellite requirement that ``generate_depos`` routed
+    through the drift stage stays bit-for-bit at default physics."""
+    n = n or cfg.num_depos
+    n_tracks = max(1, n // 512)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    entry_w = jax.random.uniform(k1, (n_tracks,), minval=0.0,
+                                 maxval=cfg.num_wires - 1.0)
+    entry_t = jax.random.uniform(k2, (n_tracks,), minval=0.0,
+                                 maxval=cfg.num_ticks - 1.0)
+    theta = jax.random.uniform(k3, (n_tracks,), minval=-1.2, maxval=1.2)
+    per = n // n_tracks + 1
+    s = jnp.arange(per, dtype=jnp.float32)[None, :]
+    wires = entry_w[:, None] + jnp.sin(theta)[:, None] * s * 0.5
+    ticks = entry_t[:, None] + jnp.cos(theta)[:, None] * s * 2.0
+    wires = wires.reshape(-1)[:n]
+    ticks = ticks.reshape(-1)[:n]
+    wires = jnp.clip(jnp.abs(wires), 0, cfg.num_wires - 1)
+    ticks = jnp.clip(jnp.abs(ticks), 0, cfg.num_ticks - 1)
+    drift_us = ticks * cfg.tick_us
+    sigma_t = jnp.sqrt(2.0 * cfg.diffusion_long * drift_us) / (
+        cfg.drift_speed_mm_us * cfg.tick_us
+    ) * 1e-2 + 0.8
+    sigma_w = jnp.sqrt(2.0 * cfg.diffusion_tran * drift_us) / (
+        cfg.wire_pitch_mm) * 1e-2 + 0.6
+    sigma_w = jnp.clip(sigma_w, 0.3, (cfg.patch_wires / 2 - 1) / cfg.nsigma)
+    sigma_t = jnp.clip(sigma_t, 0.3, (cfg.patch_ticks / 2 - 1) / cfg.nsigma)
+    charge = cfg.electrons_per_depo * jnp.exp(
+        0.3 * jax.random.normal(k4, (n,)))
+    return DepoSet(
+        wire=wires.astype(jnp.float32),
+        tick=ticks.astype(jnp.float32),
+        sigma_w=sigma_w.astype(jnp.float32),
+        sigma_t=sigma_t.astype(jnp.float32),
+        charge=charge.astype(jnp.float32),
+    )
+
+
+def _linear_pdepos(n=64, t_drift_max=100.0, q=1000.0):
+    """Depos on a drift-time ramp (fixed transverse position)."""
+    x = jnp.linspace(0.0, t_drift_max, n)
+    return PhysicalDepoSet(
+        x=x.astype(jnp.float32),
+        y=jnp.full((n,), 32.0, jnp.float32),
+        z=jnp.zeros((n,), jnp.float32),
+        t=jnp.zeros((n,), jnp.float32),
+        q=jnp.full((n,), q, jnp.float32),
+    )
+
+
+class TestSeedBitIdentity:
+    def test_generate_depos_matches_seed_default_physics(self):
+        """generate_depos = physical generation + drift stage, bit-for-bit
+        with the seed formulas at default physics, for several keys."""
+        for seed in (0, 1, 7):
+            key = jax.random.key(seed)
+            new = generate_depos(key, CFG)
+            ref = seed_generate_depos(key, CFG)
+            for field in DepoSet._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(new, field)),
+                    np.asarray(getattr(ref, field)), err_msg=field)
+
+    def test_generate_depos_matches_seed_full_scale_shape(self):
+        cfg = LArTPCConfig()  # full MicroBooNE-scale constants
+        key = jax.random.key(3)
+        new = generate_depos(key, cfg, 2048)
+        ref = seed_generate_depos(key, cfg, 2048)
+        for field in DepoSet._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(new, field)),
+                np.asarray(getattr(ref, field)), err_msg=field)
+
+    def test_wrapper_is_physical_plus_transport(self):
+        key = jax.random.key(2)
+        pdepos = generate_physical_depos(key, CFG)
+        via_stage = transport(pdepos, CFG)
+        direct = generate_depos(key, CFG)
+        for field in DepoSet._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(via_stage, field)),
+                np.asarray(getattr(direct, field)), err_msg=field)
+
+
+class TestDriftPhysics:
+    def test_attenuation_monotonic_in_drift_distance(self):
+        """With a finite electron lifetime, surviving charge strictly
+        decreases with drift time (equal deposited charge)."""
+        cfg = dataclasses.replace(CFG, electron_lifetime_us=50.0)
+        out = drift_depos(_linear_pdepos(), cfg)
+        q = np.asarray(out.charge)
+        assert (np.diff(q) < 0).all(), "attenuation must be monotonic"
+        # endpoint sanity: exp(-t_max/lifetime) = exp(-2)
+        np.testing.assert_allclose(q[-1] / q[0], np.exp(-100.0 / 50.0),
+                                   rtol=1e-5)
+
+    def test_no_lifetime_means_no_attenuation(self):
+        out = drift_depos(_linear_pdepos(), CFG)  # lifetime disabled
+        q = np.asarray(out.charge)
+        np.testing.assert_array_equal(q, np.full_like(q, 1000.0))
+
+    def test_recombination_scales_charge(self):
+        cfg = dataclasses.replace(CFG, recombination=0.7)
+        base = drift_depos(_linear_pdepos(), CFG)
+        scaled = drift_depos(_linear_pdepos(), cfg)
+        np.testing.assert_allclose(np.asarray(scaled.charge),
+                                   0.7 * np.asarray(base.charge), rtol=1e-6)
+
+    def test_diffusion_widths_grow_with_drift_time(self):
+        out = drift_depos(_linear_pdepos(t_drift_max=60.0), CFG)
+        sw, stt = np.asarray(out.sigma_w), np.asarray(out.sigma_t)
+        # monotone non-decreasing (clipping may flatten the far end)
+        assert (np.diff(sw) >= 0).all() and (np.diff(stt) >= 0).all()
+        assert sw[0] >= CFG.sigma_w_floor - 1e-6
+        assert stt[0] >= CFG.sigma_t_floor - 1e-6
+
+    def test_sigma_floors_are_config_fields(self):
+        cfg = dataclasses.replace(CFG, sigma_w_floor=1.1, sigma_t_floor=1.7)
+        out = drift_depos(_linear_pdepos(t_drift_max=5.0), cfg)
+        assert float(np.asarray(out.sigma_w).min()) >= 1.1 - 1e-6
+        assert float(np.asarray(out.sigma_t).min()) >= 1.7 - 1e-6
+
+    def test_sub_clip_floors_stay_effective(self):
+        """Floors below the 0.3 numeric guard lower the guard with them —
+        the configured floor is the real minimum width."""
+        cfg = dataclasses.replace(CFG, sigma_w_floor=0.1, sigma_t_floor=0.15)
+        pd = _linear_pdepos(n=4, t_drift_max=0.0)  # zero drift: pure floor
+        out = drift_depos(pd, cfg)
+        np.testing.assert_allclose(np.asarray(out.sigma_w), 0.1, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.sigma_t), 0.15, rtol=1e-6)
+
+    def test_arrival_tick_includes_deposition_time(self):
+        pd = _linear_pdepos(n=8, t_drift_max=20.0)
+        shifted = pd._replace(t=jnp.full((8,), 10.0, jnp.float32))
+        base = drift_depos(pd, CFG)
+        late = drift_depos(shifted, CFG)
+        np.testing.assert_allclose(
+            np.asarray(late.tick) - np.asarray(base.tick),
+            np.full((8,), 10.0 / CFG.tick_us), rtol=1e-6)
+
+    def test_from_mm_ingestion(self):
+        """Metric-space (larnd-sim style) segments ingest through from_mm:
+        mm positions land on the wires/ticks the geometry predicts."""
+        x_mm = np.array([0.0, 16.0, 80.0], np.float32)     # drift distance
+        y_mm = np.array([30.0, 60.0, 90.0], np.float32)    # transverse
+        pd = PhysicalDepoSet.from_mm(x_mm, y_mm, 0.0 * x_mm, 0.0 * x_mm,
+                                     np.full(3, 5000.0, np.float32), CFG)
+        out = drift_depos(pd, CFG)
+        np.testing.assert_allclose(np.asarray(out.wire),
+                                   y_mm / CFG.wire_pitch_mm, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out.tick),
+            x_mm / CFG.drift_speed_mm_us / CFG.tick_us, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(pd.x_mm(CFG)), x_mm, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(pd.y_mm(CFG)), y_mm, rtol=1e-6)
+
+    def test_drift_is_jit_and_vmap_safe(self):
+        pd = _linear_pdepos(n=16)
+        eager = drift_depos(pd, CFG)
+        jitted = jax.jit(lambda p: drift_depos(p, CFG))(pd)
+        for field in DepoSet._fields:
+            # XLA may fuse the sigma multiply-add into an FMA under jit, so
+            # jit-vs-eager is ulp-close, not bitwise (the generator runs
+            # eagerly on the host in every production path)
+            np.testing.assert_allclose(np.asarray(getattr(eager, field)),
+                                       np.asarray(getattr(jitted, field)),
+                                       rtol=1e-6, atol=1e-6, err_msg=field)
+        stacked = jax.tree.map(lambda x: jnp.stack([x, x]), pd)
+        batched = jax.vmap(lambda p: drift_depos(p, CFG))(stacked)
+        np.testing.assert_array_equal(np.asarray(batched.tick[0]),
+                                      np.asarray(eager.tick))

@@ -1,0 +1,227 @@
+"""Stage-graph tests: golden end-to-end regression + executor equivalence.
+
+The refactor contract (ISSUE 4): ``make_sim_fn``, ``make_batched_sim_fn``,
+``make_distributed_sim`` (covered in tests/test_distributed.py) and
+``stream_simulate`` all execute the SAME SimGraph, and the graph is
+bit-for-bit with the pre-graph code. The pinned SHA-256 digests below were
+captured from the seed revision (pre-refactor ``simulate_fig4``) on CPU —
+any entry point drifting from them is a real regression.
+"""
+import dataclasses
+import hashlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.batch import event_keys, make_batched_sim_fn, pack_events
+from repro.core.depo import generate_depos, generate_physical_depos
+from repro.core.pipeline import make_sim_fn, simulate, simulate_fig4
+from repro.core.response import make_response
+from repro.core.stages import STAGE_ORDER, build_sim_graph
+
+CFG = get_config("lartpc-uboone", smoke=True)
+
+#: captured on the seed revision (CPU backend, default smoke config, key 0);
+#: digests are backend-specific (erf/FFT/threefry lowering), so the pinned
+#: asserts are CPU-only — cross-entry-point equality is checked everywhere.
+#: A jax upgrade that changes RNG or erf lowering legitimately refreshes
+#: these: re-run `python -m tests.test_stages` and paste the new values.
+GOLDEN_ADC_SHA256 = {
+    "unfused": "319582010015d10553aa3c277b6c949b2f199dc2fed9cb9871590b8b9d198b9f",
+    "unfused_bf16": "b7237491b7ffb032601dd3114f7d732376ff5994248d5987825aa494508a46cd",
+    "fused_pallas": "4cac174a89e1d8045bf35d04a4d4e795c70698bc9cb74e3df273c376eda38c5b",
+    "fused_pallas_compact": "4cac174a89e1d8045bf35d04a4d4e795c70698bc9cb74e3df273c376eda38c5b",
+}
+GOLDEN_BATCHED_E2_SHA256 = (
+    "d5b1cd287010c315c70b1e131161c8457b2732adb0eed3d812033e3a556b5ac0")
+
+STRATEGIES = sorted(GOLDEN_ADC_SHA256)
+
+
+def _sha(arr) -> str:
+    a = np.ascontiguousarray(np.asarray(arr))
+    assert a.dtype == np.int16, a.dtype
+    return hashlib.sha256(a.tobytes()).hexdigest()
+
+
+def _entry_points(cfg):
+    """ADC grids from every single-event entry point that must agree: the
+    graph executor (make_sim_fn), the legacy wrappers (simulate /
+    simulate_fig4), and a raw SimGraph.run — all jit'd, the production
+    form (eager bf16 rounds per-op and so differs from any jitted path)."""
+    key = jax.random.key(0)
+    depos = generate_depos(key, cfg)
+    resp = make_response(cfg)
+    graph = build_sim_graph(cfg, resp)
+    return {
+        "make_sim_fn": make_sim_fn(cfg, resp=resp)(key, depos).adc,
+        "simulate": jax.jit(
+            lambda k, d: simulate(k, d, cfg, resp=resp))(key, depos).adc,
+        "simulate_fig4": jax.jit(
+            lambda k, d: simulate_fig4(k, d, resp, cfg))(key, depos).adc,
+        "graph_run_jit": jax.jit(graph.run)(key, depos).adc,
+    }
+
+
+class TestGolden:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_all_entry_points_agree(self, strategy):
+        """Graph and legacy entry points produce one identical ADC grid."""
+        cfg = dataclasses.replace(CFG, charge_grid_strategy=strategy)
+        grids = _entry_points(cfg)
+        digests = {name: _sha(adc) for name, adc in grids.items()}
+        assert len(set(digests.values())) == 1, digests
+
+    def test_eager_matches_jit_default_strategy(self):
+        """For the float32 default chain, even the eager graph run is
+        bit-identical to the jitted executor."""
+        key = jax.random.key(0)
+        depos = generate_depos(key, CFG)
+        graph = build_sim_graph(CFG, make_response(CFG))
+        eager = graph.run(key, depos).adc
+        jitted = make_sim_fn(CFG)(key, depos).adc
+        assert _sha(eager) == _sha(jitted)
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_pinned_seed_digest(self, strategy):
+        """Fixed key -> SHA of the int16 ADC grid equals the digest captured
+        on the seed revision: the refactor is provably bit-for-bit."""
+        if jax.default_backend() != "cpu":
+            pytest.skip("pinned digests are CPU-lowering specific")
+        cfg = dataclasses.replace(CFG, charge_grid_strategy=strategy)
+        key = jax.random.key(0)
+        adc = make_sim_fn(cfg)(key, generate_depos(key, cfg)).adc
+        assert _sha(adc) == GOLDEN_ADC_SHA256[strategy]
+
+    def test_batched_matches_seed_digest(self):
+        if jax.default_backend() != "cpu":
+            pytest.skip("pinned digests are CPU-lowering specific")
+        key = jax.random.key(0)
+        events = [generate_depos(jax.random.fold_in(key, e), CFG)
+                  for e in range(2)]
+        out = make_batched_sim_fn(CFG)(event_keys(key, range(2)),
+                                       pack_events(events))
+        assert _sha(out.adc) == GOLDEN_BATCHED_E2_SHA256
+
+    def test_batched_rows_equal_single_event_runs(self):
+        """The vmap executor and the single-event executor run the same
+        graph: per-event rows are bit-identical."""
+        key = jax.random.key(5)
+        events = [generate_depos(jax.random.fold_in(key, e), CFG)
+                  for e in range(3)]
+        batch = pack_events(events)
+        keys = event_keys(key, range(3))
+        out = make_batched_sim_fn(CFG)(keys, batch)
+        sim = make_sim_fn(CFG)
+        for e in range(3):
+            ref = sim(keys[e], batch.event(e))
+            np.testing.assert_array_equal(np.asarray(out.adc[e]),
+                                          np.asarray(ref.adc))
+
+
+class TestGraphMechanics:
+    def test_canonical_stage_order(self):
+        graph = build_sim_graph(CFG, make_response(CFG))
+        assert graph.stage_names == STAGE_ORDER
+
+    def test_no_noise_drops_the_stage(self):
+        graph = build_sim_graph(CFG, make_response(CFG), add_noise=False)
+        assert "noise" not in graph.stage_names
+        assert graph.stage_names[-1] == "digitize"
+
+    def test_physical_input_drifts_inside_the_graph(self):
+        """Feeding physical depos to any executor transports them through
+        the drift stage — same ADC as pre-drifting by hand."""
+        if jax.default_backend() != "cpu":
+            # accelerator backends may FMA-fuse the in-graph drift sigma
+            # math, making jit-drift vs eager-drift ulp-different
+            pytest.skip("bitwise jit-vs-eager drift is CPU-specific")
+        key = jax.random.key(1)
+        pdepos = generate_physical_depos(key, CFG)
+        sim = make_sim_fn(CFG)
+        from_physical = sim(key, pdepos)
+        from_detector = sim(key, generate_depos(key, CFG))
+        np.testing.assert_array_equal(np.asarray(from_physical.adc),
+                                      np.asarray(from_detector.adc))
+
+    def test_stage_override(self):
+        """SimGraph.replace swaps one stage without touching the executor
+        (the mechanism the distributed pipeline specializes through)."""
+        graph = build_sim_graph(CFG, make_response(CFG), add_noise=False)
+        marker = {}
+
+        def null_charge_grid(state):
+            marker["ran"] = True
+            import jax.numpy as jnp
+            return state._replace(grid=jnp.zeros(
+                (CFG.num_wires, CFG.num_ticks), jnp.float32))
+
+        out = graph.replace(charge_grid=null_charge_grid).run(
+            jax.random.key(0), generate_depos(jax.random.key(0), CFG))
+        assert marker.get("ran")
+        adc = np.asarray(out.adc)
+        assert (adc == CFG.adc_baseline).all()  # zero grid -> baseline ADC
+
+    def test_override_unknown_stage_raises(self):
+        graph = build_sim_graph(CFG, make_response(CFG))
+        with pytest.raises(KeyError, match="deconvolve"):
+            graph.replace(deconvolve=lambda s: s)
+
+    def test_graph_is_reusable_and_stateless(self):
+        graph = build_sim_graph(CFG, make_response(CFG))
+        key = jax.random.key(9)
+        depos = generate_depos(key, CFG)
+        a = graph.run(key, depos).adc
+        b = graph.run(key, depos).adc
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_registry_ops_annotated(self):
+        """Stages declare the hot op they dispatch, so tooling can map the
+        timing board onto the strategy registry."""
+        graph = build_sim_graph(CFG, make_response(CFG))
+        ops = {s.name: s.op for s in graph.stages}
+        assert ops["drift"] == "drift"
+        assert ops["charge_grid"] == "charge_grid"
+        assert ops["convolve"] == "fft_convolve"
+        assert ops["noise"] is None and ops["digitize"] is None
+
+
+class TestTimed:
+    def test_timed_covers_every_stage_and_matches_run(self):
+        graph = build_sim_graph(CFG, make_response(CFG))
+        key = jax.random.key(0)
+        pdepos = generate_physical_depos(key, CFG)
+        out, timings = graph.timed(key, pdepos, warmup=0, iters=1)
+        assert tuple(timings) == graph.stage_names
+        assert all(t >= 0 for t in timings.values())
+        ref = jax.jit(graph.run)(key, pdepos)
+        np.testing.assert_array_equal(np.asarray(out.adc),
+                                      np.asarray(ref.adc))
+
+    def test_timed_batched(self):
+        graph = build_sim_graph(CFG, make_response(CFG))
+        key = jax.random.key(0)
+        events = [generate_physical_depos(jax.random.fold_in(key, e), CFG)
+                  for e in range(2)]
+        batch = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *events)
+        keys = event_keys(key, range(2))
+        out, timings = graph.timed(keys, batch, warmup=0, iters=1,
+                                   batched=True)
+        assert tuple(timings) == graph.stage_names
+        assert np.asarray(out.adc).shape == (2, CFG.num_wires, CFG.num_ticks)
+
+
+if __name__ == "__main__":
+    # refresh helper: print current digests to paste into the pins above
+    key = jax.random.key(0)
+    for strategy in STRATEGIES:
+        cfg = dataclasses.replace(CFG, charge_grid_strategy=strategy)
+        adc = make_sim_fn(cfg)(key, generate_depos(key, cfg)).adc
+        print(f'    "{strategy}": "{_sha(adc)}",')
+    events = [generate_depos(jax.random.fold_in(key, e), CFG)
+              for e in range(2)]
+    out = make_batched_sim_fn(CFG)(event_keys(key, range(2)),
+                                   pack_events(events))
+    print(f'batched_E2: "{_sha(out.adc)}"')
