@@ -8,6 +8,12 @@ repo's committed ``BENCH_pipeline.json``:
         --baseline BENCH_pipeline.json --fresh BENCH_pipeline_fresh.json \
         --record pipeline/fig4_batched --max-ratio 2.0
 
+``--record`` values may be shell-style globs (fnmatch): a pattern expands
+against the union of baseline and fresh record names, so families of rows —
+e.g. the per-plane stage rows ``'stages/fig4_smoke3p_plane*_total_fused'``
+— are gated without enumerating each plane. A glob matching nothing fails
+loudly (a vanished family is a regression too).
+
 Exit status 1 (with a diff table) when fresh/baseline exceeds the ratio for
 any watched record; records missing from the fresh run also fail (a silently
 vanished benchmark is a regression too). Records missing from the *baseline*
@@ -16,6 +22,7 @@ only warn — new benchmarks land before their baseline numbers do.
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
@@ -27,10 +34,31 @@ def load_records(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in data["records"]}
 
 
+def expand_records(patterns: list, baseline: dict, fresh: dict) -> list:
+    """Expand glob patterns against all known record names (plain names
+    pass through so a fully missing record still reports as MISSING)."""
+    known = sorted(set(baseline) | set(fresh))
+    names: list = []
+    for pat in patterns:
+        if any(c in pat for c in "*?["):
+            hits = [n for n in known if fnmatch.fnmatch(n, pat)]
+            if not hits:
+                print(f"error: --record pattern {pat!r} matched no records",
+                      file=sys.stderr)
+                return []
+            names.extend(h for h in hits if h not in names)
+        elif pat not in names:
+            names.append(pat)
+    return names
+
+
 def check(baseline_path: str, fresh_path: str, records: list,
           max_ratio: float) -> int:
     baseline = load_records(baseline_path)
     fresh = load_records(fresh_path)
+    records = expand_records(records, baseline, fresh)
+    if not records:
+        return 1
     failed = False
     print(f"{'record':<40} {'baseline_us':>12} {'fresh_us':>12} {'ratio':>7}")
     for name in records:
@@ -61,7 +89,8 @@ def main() -> int:
     ap.add_argument("--fresh", required=True,
                     help="freshly produced BENCH_*.json")
     ap.add_argument("--record", action="append", required=True,
-                    help="record name to gate (repeatable)")
+                    help="record name or fnmatch glob to gate (repeatable); "
+                         "globs expand against baseline+fresh record names")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when fresh/baseline exceeds this (default 2x)")
     args = ap.parse_args()

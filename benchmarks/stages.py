@@ -20,11 +20,12 @@ so their sum is an upper bound on the fused end-to-end program — the
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
 from benchmarks.common import emit, time_fn, write_json
-from repro.config import LArTPCConfig, get_config
+from repro.config import LArTPCConfig, get_config, plane_specs
 from repro.core.batch import event_keys
 from repro.core.depo import generate_physical_depos
 from repro.core.response import make_response
@@ -89,15 +90,50 @@ def detector_frame_board(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
         emit(f"stages/fig4_{tag}_predrifted_{name}", sec, "")
 
 
+def plane_boards(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
+    """3-plane (U/V/W) boards: the full multi-plane graph per stage, plus
+    PER-PLANE rows — the same graph restricted to one plane at a time — so
+    the papers' per-plane cost tables are reproducible. Per-plane rows in
+    the committed BENCH_stages.json are regression-gated in CI
+    (``benchmarks/check_regression.py --record 'stages/...plane*...'``).
+    """
+    cfg = resolve_config(dataclasses.replace(cfg, num_planes=3))
+    key = jax.random.key(0)
+    pdepos = generate_physical_depos(key, cfg)
+    graph = build_sim_graph(cfg)
+    _, timings = graph.timed(key, pdepos, iters=iters)
+    total = sum(timings.values())
+    for name, sec in timings.items():
+        emit(f"stages/fig4_{tag}3p_{name}", sec,
+             f"frac={sec / total:.3f};planes=3;n={cfg.num_depos}")
+    fused = jax.jit(graph.run)
+    t = time_fn(lambda: fused(key, pdepos).adc, iters=iters)
+    emit(f"stages/fig4_{tag}3p_total_fused", t,
+         f"stage_sum_us={total * 1e6:.1f};planes=3")
+    for spec in plane_specs(cfg):
+        p = spec.index
+        g = build_sim_graph(cfg, planes=(p,))
+        _, pt = g.timed(key, pdepos, iters=iters)
+        for name, sec in pt.items():
+            emit(f"stages/fig4_{tag}3p_plane{p}_{name}", sec,
+                 f"plane={p};kind={spec.kind}")
+        fused_p = jax.jit(g.run)
+        tp = time_fn(lambda: fused_p(key, pdepos).adc, iters=iters)
+        emit(f"stages/fig4_{tag}3p_plane{p}_total_fused", tp,
+             f"plane={p};kind={spec.kind}")
+
+
 def main(full: bool = False):
     smoke = get_config("lartpc-uboone", smoke=True)
     stage_board(smoke, "smoke")
     batched_stage_board(smoke, "smoke")
     detector_frame_board(smoke, "smoke")
+    plane_boards(smoke, "smoke")
     if full:
         full_cfg = get_config("lartpc-uboone")
         stage_board(full_cfg, "full", iters=1)
         batched_stage_board(full_cfg, "full", e_sz=2, iters=1)
+        plane_boards(full_cfg, "full", iters=1)
 
 
 if __name__ == "__main__":

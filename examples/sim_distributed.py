@@ -15,6 +15,8 @@ ap.add_argument("--devices", type=int, default=8,
                 help="forced host device count (even, or 1)")
 ap.add_argument("--smoke", action="store_true",
                 help="small grid/depo sizes (CI-friendly)")
+ap.add_argument("--planes", type=int, default=1,
+                help="readout planes (1 = seed single-plane, 3 = U/V/W)")
 args = ap.parse_args()
 
 os.environ["XLA_FLAGS"] = (
@@ -25,10 +27,12 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.config import LArTPCConfig  # noqa: E402
-from repro.core.depo import generate_depos  # noqa: E402
+from repro.core.depo import (generate_depos,  # noqa: E402
+                             generate_physical_depos)
 from repro.core.distributed import (make_distributed_sim,  # noqa: E402
                                     padded_grid_shape, shard_depos)
-from repro.core.response import make_distributed_response  # noqa: E402
+from repro.core.response import (make_distributed_plane_responses,  # noqa: E402
+                                 make_distributed_response)
 
 if args.smoke:
     cfg = LArTPCConfig(num_wires=128, num_ticks=512, num_depos=512,
@@ -36,6 +40,9 @@ if args.smoke:
 else:
     cfg = LArTPCConfig(num_wires=256, num_ticks=1024, num_depos=4096,
                        response_wires=11, response_ticks=64)
+if args.planes > 1:
+    import dataclasses
+    cfg = dataclasses.replace(cfg, num_planes=args.planes)
 
 n_dev = len(jax.devices())
 shape = (n_dev // 2, 2) if n_dev % 2 == 0 else (n_dev, 1)
@@ -43,18 +50,27 @@ mesh = jax.make_mesh(shape, ("data", "model"))
 print(f"mesh: {dict(mesh.shape)} over {n_dev} devices")
 
 w_pad, _, _ = padded_grid_shape(cfg, n_dev)
-resp = make_distributed_response(cfg, w_pad)
 key = jax.random.key(0)
-depos = generate_depos(key, cfg)
+if cfg.num_planes > 1:
+    # multi-plane runs take PHYSICAL depos: the in-graph drift stage
+    # projects them onto every plane's wire direction
+    resp = make_distributed_plane_responses(cfg, w_pad)
+    depos = generate_physical_depos(key, cfg)
+else:
+    resp = make_distributed_response(cfg, w_pad)
+    depos = generate_depos(key, cfg)
 sharded = shard_depos(depos, mesh)
-print(f"depos sharded: {sharded.wire.sharding}")
+print(f"depos sharded: {sharded[0].sharding}")
 
 sim = make_distributed_sim(mesh, cfg, resp)
 adc = sim(key, sharded)
 print(f"ADC out: {adc.shape} {adc.dtype}, sharding {adc.sharding}")
-a = np.asarray(adc)[:cfg.num_wires]
-hit = (np.abs(a.astype(int) - int(cfg.adc_baseline)) > 5).sum()
-print(f"signal deviation max {np.abs(a - cfg.adc_baseline).max()} counts; "
-      f"{hit} hit pixels")
-assert hit > 0, "distributed sim produced an empty readout"
+a = np.asarray(adc)[..., :cfg.num_wires, :]
+planes = a.reshape((-1,) + a.shape[-2:])
+for p, plane in enumerate(planes):
+    hit = (np.abs(plane.astype(int) - int(cfg.adc_baseline)) > 5).sum()
+    print(f"plane {p}: signal deviation max "
+          f"{np.abs(plane - cfg.adc_baseline).max()} counts; "
+          f"{hit} hit pixels")
+    assert hit > 0, f"distributed sim produced an empty readout (plane {p})"
 print("OK")

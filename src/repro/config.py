@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configs
@@ -196,6 +196,61 @@ class LArTPCConfig:
     adc_per_electron: float = 0.01
     adc_baseline: float = 900.0
     dtype: str = "float32"
+    # ---- multi-plane readout geometry (ISSUE 5 tentpole) ----
+    # number of wire planes read out per event. 1 (the default) is the seed
+    # single-plane readout, bit-identical to every pre-multi-plane revision;
+    # 3 is the paper-faithful MicroBooNE-like U/V/W triple (two induction
+    # planes at +-60 degrees, one vertical collection plane). The per-plane
+    # tuples below describe the full triple and are consumed as the first
+    # ``num_planes`` entries when ``num_planes > 1`` (see ``plane_specs``).
+    num_planes: int = 1
+    # wire ANGLE per plane, degrees from vertical; the pitch direction the
+    # ``wire`` coordinate indexes is perpendicular to the wires
+    plane_angles_deg: Tuple[float, ...] = (60.0, -60.0, 0.0)
+    # per-plane wire pitch [mm]; () means ``wire_pitch_mm`` for every plane
+    plane_pitches_mm: Tuple[float, ...] = ()
+    # per-plane field-response type: "induction" (bipolar) | "collection"
+    # (unipolar) — selects the plane's ``make_response`` kernel
+    plane_types: Tuple[str, ...] = ("induction", "induction", "collection")
+
+
+class PlaneSpec(NamedTuple):
+    """Resolved geometry of one readout plane (plain data, hashable)."""
+
+    index: int
+    kind: str          # "induction" | "collection"
+    angle_deg: float   # wire angle from vertical, degrees
+    pitch_mm: float    # wire pitch of this plane
+
+
+def plane_specs(cfg: "LArTPCConfig") -> Tuple[PlaneSpec, ...]:
+    """Resolved per-plane geometry of ``cfg``.
+
+    ``num_planes == 1`` is the seed single-plane readout: identity
+    projection (wires perpendicular to the generator's transverse axis,
+    angle 0, pitch ``wire_pitch_mm``) with the bipolar induction response —
+    the exact pre-multi-plane behavior, so the plane tuples are not
+    consulted. ``num_planes > 1`` reads the first ``num_planes`` entries of
+    ``plane_angles_deg`` / ``plane_pitches_mm`` / ``plane_types``.
+    """
+    if cfg.num_planes < 1:
+        raise ValueError(f"num_planes must be >= 1, got {cfg.num_planes}")
+    if cfg.num_planes == 1:
+        return (PlaneSpec(0, "induction", 0.0, cfg.wire_pitch_mm),)
+    pitches = cfg.plane_pitches_mm or (cfg.wire_pitch_mm,) * cfg.num_planes
+    for name, tup in (("plane_angles_deg", cfg.plane_angles_deg),
+                      ("plane_pitches_mm", pitches),
+                      ("plane_types", cfg.plane_types)):
+        if len(tup) < cfg.num_planes:
+            raise ValueError(
+                f"{name} has {len(tup)} entries < num_planes={cfg.num_planes}")
+    for kind in cfg.plane_types[: cfg.num_planes]:
+        if kind not in ("induction", "collection"):
+            raise ValueError(f"unknown plane type {kind!r}; expected "
+                             "'induction' or 'collection'")
+    return tuple(
+        PlaneSpec(p, cfg.plane_types[p], cfg.plane_angles_deg[p], pitches[p])
+        for p in range(cfg.num_planes))
 
 
 # ---------------------------------------------------------------------------

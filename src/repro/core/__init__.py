@@ -3,10 +3,16 @@
 Stage chain (paper Eq. 1/2, composed as a ``SimGraph`` in ``stages.py``):
     physical depos --drift--> depos --charge_grid--> S(t,x)
         --convolve--> M(t,x) --noise--> + N(t,x) --digitize--> ADC(t,x)
+
+Multi-plane configs (``cfg.num_planes > 1``) run the readout stages once
+per wire plane (U/V/W) and stack a leading plane axis on every output.
 """
-from repro.core.depo import DepoSet, generate_depos, generate_physical_depos
-from repro.core.drift import PhysicalDepoSet, drift_depos
-from repro.core.response import DetectorResponse, make_response
+from repro.core.depo import (DepoSet, generate_depos, generate_physical_depos,
+                             generate_plane_depos)
+from repro.core.drift import (PhysicalDepoSet, drift_depos, transport,
+                              transport_planes)
+from repro.core.response import (DetectorResponse, make_plane_responses,
+                                 make_response)
 from repro.core.stages import SimGraph, SimOutput, SimState, Stage, build_sim_graph
 from repro.core.pipeline import simulate, make_sim_fn
 from repro.core.batch import (EventBatch, event_keys, make_batched_sim_fn,
@@ -17,9 +23,13 @@ __all__ = [
     "PhysicalDepoSet",
     "generate_depos",
     "generate_physical_depos",
+    "generate_plane_depos",
     "drift_depos",
+    "transport",
+    "transport_planes",
     "DetectorResponse",
     "make_response",
+    "make_plane_responses",
     "SimGraph",
     "SimOutput",
     "SimState",

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.config import LArTPCConfig
 from repro.core.depo import DepoSet
-from repro.core.response import DetectorResponse, make_response
+from repro.core.response import DetectorResponse
 from repro.core.stages import SimGraph, SimOutput, build_sim_graph
 from repro.parallel.sharding import current_mesh, logical, named_sharding
 
@@ -47,7 +47,9 @@ class EventBatch(NamedTuple):
 
     wire/tick/sigma_w/sigma_t/charge : (E, N_max) float32, rows past
     ``n_depos[e]`` are padding (charge 0, sigma 1) that contributes nothing.
-    n_depos : (E,) int32 — valid depo count per event.
+    Multi-plane events (``generate_plane_depos``) carry a plane axis
+    between the event and depo axes: (E, P, N_max).
+    n_depos : (E,) int32 — valid depo count per event (per plane).
     """
 
     wire: jax.Array
@@ -63,7 +65,7 @@ class EventBatch(NamedTuple):
 
     @property
     def max_depos(self) -> int:
-        return self.wire.shape[1]
+        return self.wire.shape[-1]
 
     @property
     def total_depos(self) -> int:
@@ -83,14 +85,20 @@ class EventBatch(NamedTuple):
                        charge=self.charge[e])
 
 
-def empty_event() -> DepoSet:
-    """A zero-depo event (used to pad the *event* axis of a short batch)."""
-    z = jnp.zeros((0,), jnp.float32)
+def empty_event(planes: int = 1) -> DepoSet:
+    """A zero-depo event (used to pad the *event* axis of a short batch).
+
+    ``planes > 1`` shapes the leaves (planes, 0) so the empty event stacks
+    with multi-plane events from ``generate_plane_depos``.
+    """
+    shape = (0,) if planes == 1 else (planes, 0)
+    z = jnp.zeros(shape, jnp.float32)
     return DepoSet(wire=z, tick=z, sigma_w=z, sigma_t=z, charge=z)
 
 
 def pad_depos(depos: DepoSet, n_max: int) -> DepoSet:
-    """Pad one event's depo axis to ``n_max`` with inert depos.
+    """Pad one event's depo axis (the LAST leaf axis — a plane axis may
+    lead it) to ``n_max`` with inert depos.
 
     Padding rows have charge 0 (rasterizes to an all-zero patch, fluctuation
     variance 0, scatter-add of zeros) and sigma 1 (any positive value —
@@ -102,7 +110,8 @@ def pad_depos(depos: DepoSet, n_max: int) -> DepoSet:
     pad = n_max - n
 
     def padf(x, fill=0.0):
-        return jnp.pad(x, (0, pad), constant_values=fill)
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        return jnp.pad(x, widths, constant_values=fill)
 
     return DepoSet(
         wire=padf(depos.wire), tick=padf(depos.tick),
@@ -160,10 +169,14 @@ def simulate_events(keys: jax.Array, batch: EventBatch, resp: DetectorResponse,
     if graph is None:
         graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
     depos = batch.depo_set()
-    depos = jax.tree.map(lambda x: logical(x, ("events", None)), depos)
+
+    def ev_names(x):
+        return ("events",) + (None,) * (x.ndim - 1)
+
+    depos = jax.tree.map(lambda x: logical(x, ev_names(x)), depos)
     keys = logical(keys, ("events",))
     out = jax.vmap(graph.run)(keys, depos)
-    return SimOutput(*(logical(x, ("events", None, None)) for x in out))
+    return SimOutput(*(logical(x, ev_names(x)) for x in out))
 
 
 def make_batched_sim_fn(cfg: LArTPCConfig,
@@ -184,8 +197,8 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
     from repro.tune import resolve_config
 
     cfg = resolve_config(cfg)
-    resp = resp if resp is not None else make_response(cfg)
-    # build_sim_graph supplies the standard RNG pool when cfg asks for it
+    # build_sim_graph supplies the standard RNG pool when cfg asks for it,
+    # and the per-plane default responses when resp is None
     graph = build_sim_graph(cfg, resp, add_noise=add_noise)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
@@ -208,6 +221,7 @@ def shard_events(batch: EventBatch, mesh=None) -> EventBatch:
         s = named_sharding(x.shape, names, mesh=mesh)
         return jax.device_put(x, s) if s is not None else jax.device_put(x)
 
-    arrs = {f: put(getattr(batch, f), ("events", None))
+    arrs = {f: put(getattr(batch, f),
+                   ("events",) + (None,) * (getattr(batch, f).ndim - 1))
             for f in DepoSet._fields}
     return EventBatch(n_depos=put(batch.n_depos, ("events",)), **arrs)

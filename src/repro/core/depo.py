@@ -37,7 +37,9 @@ class DepoSet(NamedTuple):
 
     @property
     def n(self) -> int:
-        return self.wire.shape[0]
+        """Depos per plane — the last axis (leaves may carry leading plane
+        and/or event axes: (N,), (P, N), (E, P, N))."""
+        return self.wire.shape[-1]
 
 
 def generate_physical_depos(key: jax.Array, cfg: LArTPCConfig,
@@ -72,6 +74,18 @@ def generate_physical_depos(key: jax.Array, cfg: LArTPCConfig,
     wires = jnp.clip(jnp.abs(wires), 0, cfg.num_wires - 1)
     ticks = jnp.clip(jnp.abs(ticks), 0, cfg.num_ticks - 1)
 
+    # along-wire position z [mm]: tracks slope through a square-ish
+    # transverse volume. Unused by the identity single-plane readout (its
+    # projection never reads z, so these draws don't perturb it) but gives
+    # the rotated U/V planes of a multi-plane config real geometry.
+    k5a, k5b = jax.random.split(k5)
+    z_extent = cfg.num_wires * cfg.wire_pitch_mm
+    entry_z = jax.random.uniform(k5a, (n_tracks,), minval=0.0,
+                                 maxval=z_extent)
+    dz = jax.random.uniform(k5b, (n_tracks,), minval=-2.0, maxval=2.0)
+    zs = (entry_z[:, None] + dz[:, None] * s).reshape(-1)[:n]
+    zs = jnp.clip(jnp.abs(zs), 0, z_extent)
+
     # Landau-ish long-tailed charge per depo (lognormal)
     charge = cfg.electrons_per_depo * jnp.exp(
         0.3 * jax.random.normal(k4, (n,))
@@ -79,7 +93,7 @@ def generate_physical_depos(key: jax.Array, cfg: LArTPCConfig,
     return PhysicalDepoSet(
         x=(ticks * cfg.tick_us).astype(jnp.float32),  # drift time [us]
         y=wires.astype(jnp.float32),                  # wire-pitch units
-        z=jnp.zeros((n,), jnp.float32),
+        z=zs.astype(jnp.float32),
         t=jnp.zeros((n,), jnp.float32),               # deposited at trigger
         q=charge.astype(jnp.float32),
     )
@@ -96,6 +110,16 @@ def generate_depos(key: jax.Array, cfg: LArTPCConfig, n: int | None = None) -> D
     from repro.core.drift import transport
 
     return transport(generate_physical_depos(key, cfg, n), cfg)
+
+
+def generate_plane_depos(key: jax.Array, cfg: LArTPCConfig,
+                         n: int | None = None) -> DepoSet:
+    """Physical depo generation + multi-plane transport: one DepoSet with
+    a leading plane axis ``(num_planes, N)`` — the pre-drifted input of the
+    streaming launcher in multi-plane configs."""
+    from repro.core.drift import transport_planes
+
+    return transport_planes(generate_physical_depos(key, cfg, n), cfg)
 
 
 def depo_patch_origin(depos: DepoSet, cfg: LArTPCConfig):

@@ -35,9 +35,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import LArTPCConfig
 from repro.core import fluctuate as fl
 from repro.core.depo import DepoSet
-from repro.core.noise import noise_spectrum
+from repro.core.noise import noise_spectrum, sample_noise_rows
 from repro.core.rasterize import rasterize
-from repro.core.response import DetectorResponse
 from repro.core.scatter import scatter_add
 from repro.core.stages import SimState, build_sim_graph
 
@@ -54,14 +53,19 @@ def padded_grid_shape(cfg: LArTPCConfig, nshards: int):
     return w_pad, cfg.num_ticks, f_pad
 
 
-def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
+def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
                          axes: Sequence[str] = ("data", "model"),
                          scatter_reduction: str = "psum_scatter",
                          add_noise: bool = True):
     """Build the jit'd distributed sim: (key, depos sharded over `axes`) -> ADC.
 
-    `resp.freq` here must be the response at (W_pad, T) grid shape — build it
-    with ``make_distributed_response``.
+    `resp` is the response at the *distributed* (W_pad, T) grid shape —
+    build it with ``make_distributed_response`` (single plane) or
+    ``make_distributed_plane_responses`` (one per plane, multi-plane
+    configs). Multi-plane configs take *physical* depos (the stock drift
+    stage projects them onto every plane in-graph) and return a
+    (num_planes, W_pad, T) ADC grid, plane axis replicated, wire axis
+    sharded.
 
     scatter_reduction:
       psum_scatter : each device scatter-adds its depos into a full-size
@@ -73,9 +77,28 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
                      exchanges the margins with ring neighbours, partials
                      psum'd over the other axes. Moves O(W_pad*T/nshards)
                      bytes — the paper's atomic-add turned into a
-                     neighbour exchange.
+                     neighbour exchange. Single-plane only: each plane has
+                     its own wire coordinate, so one host-side wire binning
+                     cannot serve them all.
     """
+    from repro.config import plane_specs
+
     axes = tuple(axes)
+    specs = plane_specs(cfg)
+    multi = cfg.num_planes > 1
+    if multi and scatter_reduction == "halo":
+        raise ValueError(
+            "scatter_reduction='halo' is single-plane only: depos are "
+            "pre-binned by ONE wire coordinate, but every plane projects "
+            "its own; use 'psum_scatter' for multi-plane configs")
+    if multi:
+        resps = tuple(resp)
+        if len(resps) != len(specs):
+            raise ValueError(f"got {len(resps)} responses for "
+                             f"{len(specs)} planes")
+        rfreqs = [r.freq for r in resps]
+    else:
+        rfreqs = [resp.freq]  # (w_pad, nfreq) complex64, precomputed
     nshards = 1
     for a in axes:
         nshards *= mesh.shape[a]
@@ -95,21 +118,21 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
     w_shard = w_pad // nshards
     f_shard = f_pad // nshards
 
-    rfreq = resp.freq  # (w_pad, nfreq) complex64, precomputed
     namp = noise_spectrum(cfg)  # (nfreq,)
 
     # The distributed executor runs the SAME SimGraph as the single-event
     # and batched paths; only the collective-aware stages are overridden
     # (charge_grid reduces across devices, convolve is the pencil FFT,
     # noise draws per-device wire-local realizations). Drift and digitize
-    # are the stock stages — both are elementwise, so they shard freely.
+    # are the stock stages — drift is elementwise over the (sharded) depo
+    # axis and digitize over the grid, so both shard freely, including the
+    # multi-plane per-plane projection.
 
-    def dist_charge_grid(state: SimState) -> SimState:
-        # ---- rasterize + fluctuate (pure DP) ----
-        depos = state.depos
+    def _charge_grid_one(depos, base_key):
+        """One plane's depo shard -> its wire-sharded grid piece."""
         patches, w0, t0 = rasterize(depos, cfg)
         if cfg.fluctuate and cfg.rng_strategy != "none":
-            kf = jax.random.fold_in(state.key, _flat_index(axes, mesh))
+            kf = jax.random.fold_in(base_key, _flat_index(axes, mesh))
             patches = fl.fluctuate_counter(kf, patches, depos.charge)
 
         # ---- scatter-add + reduction to wire-sharded grid ----
@@ -140,11 +163,22 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
                     mesh.shape[a], grid_local.shape[0] // mesh.shape[a], t_len)
                 grid_local = jax.lax.psum_scatter(
                     grid_local, a, scatter_dimension=0, tiled=False)
-        return state._replace(grid=grid_local)
+        return grid_local
 
-    def dist_convolve(state: SimState) -> SimState:
+    def dist_charge_grid(state: SimState) -> SimState:
+        if not multi:
+            return state._replace(
+                grid=_charge_grid_one(state.depos, state.key))
+        grids = []
+        for i, spec in enumerate(specs):
+            depos_p = jax.tree.map(lambda x, i=i: x[i], state.depos)
+            base = jax.random.fold_in(state.key, spec.index)
+            grids.append(_charge_grid_one(depos_p, base))
+        return state._replace(grid=jnp.stack(grids))
+
+    def _convolve_one(grid_local, rfreq):
         # ---- pencil FFT: tick rFFT local -> transpose -> wire FFT ----
-        freq_t = jnp.fft.rfft(state.grid, axis=-1)          # (w_shard, nfreq)
+        freq_t = jnp.fft.rfft(grid_local, axis=-1)          # (w_shard, nfreq)
         freq_t = jnp.pad(freq_t, ((0, 0), (0, f_pad - nfreq)))
         # transpose: (w_shard, f_pad) -> gather wires / scatter freq
         blk = freq_t.reshape(w_shard, nshards, f_shard)
@@ -165,17 +199,29 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
         blk = cols.reshape(nshards, w_shard, f_shard)
         blk = _all_to_all_chain(blk, axes, mesh)
         freq_t = jnp.swapaxes(blk, 0, 1).reshape(w_shard, f_pad)[:, :nfreq]
-        signal = jnp.fft.irfft(freq_t, n=t_len, axis=-1).real.astype(jnp.float32)
-        return state._replace(signal=signal)
+        return jnp.fft.irfft(freq_t, n=t_len, axis=-1).real.astype(jnp.float32)
+
+    def dist_convolve(state: SimState) -> SimState:
+        if not multi:
+            return state._replace(signal=_convolve_one(state.grid, rfreqs[0]))
+        return state._replace(signal=jnp.stack([
+            _convolve_one(state.grid[i], rfreqs[i])
+            for i in range(len(rfreqs))]))
+
+    def _noise_one(kn):
+        # wire-local noise realization for one plane: the shared draw, so
+        # the Parseval normalization lives in exactly one place
+        return sample_noise_rows(kn, w_shard, namp, t_len)
 
     def dist_noise(state: SimState) -> SimState:
-        # ---- wire-local noise, per-device key schedule ----
+        # per-device key schedule
         kn = jax.random.fold_in(state.key, 77 + _flat_index(axes, mesh))
-        k1, k2 = jax.random.split(kn)
-        re = jax.random.normal(k1, (w_shard, nfreq))
-        im = jax.random.normal(k2, (w_shard, nfreq))
-        spec = (re + 1j * im) * namp[None, :] * 0.7071067811865476
-        noise = jnp.fft.irfft(spec, n=t_len, axis=-1).astype(jnp.float32)
+        if not multi:
+            noise = _noise_one(kn)
+        else:
+            noise = jnp.stack([
+                _noise_one(jax.random.fold_in(kn, spec.index))
+                for spec in specs])
         return state._replace(
             signal=state.signal + noise / max(cfg.adc_per_electron, 1e-30))
 
@@ -188,11 +234,12 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp: DetectorResponse,
     def local_run(key, depos):
         return graph.run(key, depos).adc
 
-    depo_spec = DepoSet(*(P(axes) for _ in range(5)))
     fn = shard_map(
         local_run, mesh=mesh,
-        in_specs=(P(), depo_spec),
-        out_specs=P(axes, None),
+        # the depo spec is a pytree prefix: every leaf of the depos arg
+        # (DepoSet or PhysicalDepoSet) shards its depo axis over `axes`
+        in_specs=(P(), P(axes)),
+        out_specs=P(None, axes, None) if multi else P(axes, None),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -310,8 +357,14 @@ def bin_depos_by_wire(depos: DepoSet, n_strips: int, w_pad: int) -> DepoSet:
     )
 
 
-def shard_depos(depos: DepoSet, mesh: Mesh, axes=("data", "model")) -> DepoSet:
-    """Pad depo count to shard evenly and device_put with the DP sharding."""
+def shard_depos(depos, mesh: Mesh, axes=("data", "model")):
+    """Pad depo count to shard evenly and device_put with the DP sharding.
+
+    Accepts a detector-frame ``DepoSet`` or a physical ``PhysicalDepoSet``
+    (the input of multi-plane distributed runs — the in-graph drift stage
+    projects it per plane). Padding depos carry zero charge, so they
+    contribute nothing to any plane.
+    """
     nshards = 1
     for a in axes:
         nshards *= mesh.shape[a]
@@ -322,10 +375,13 @@ def shard_depos(depos: DepoSet, mesh: Mesh, axes=("data", "model")) -> DepoSet:
     def padf(x):
         return jnp.pad(x, (0, pad))
 
-    padded = DepoSet(*(padf(x) for x in depos))
-    # padded depos have zero charge -> contribute nothing
-    padded = padded._replace(charge=padded.charge.at[n:].set(0.0),
-                             sigma_w=padded.sigma_w.at[n:].set(1.0),
-                             sigma_t=padded.sigma_t.at[n:].set(1.0))
+    padded = type(depos)(*(padf(x) for x in depos))
+    if isinstance(depos, DepoSet):
+        # zero-charge padding; positive sigmas avoid 0/0 in Gaussian edges
+        padded = padded._replace(charge=padded.charge.at[n:].set(0.0),
+                                 sigma_w=padded.sigma_w.at[n:].set(1.0),
+                                 sigma_t=padded.sigma_t.at[n:].set(1.0))
+    # physical depos pad with zeros: q=0 is inert, and the drift stage's
+    # sigma floors keep zero-drift-time widths positive
     sh = NamedSharding(mesh, P(tuple(axes)))
-    return DepoSet(*(jax.device_put(x, sh) for x in padded))
+    return type(depos)(*(jax.device_put(x, sh) for x in padded))

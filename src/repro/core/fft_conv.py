@@ -27,8 +27,18 @@ from repro.tune.registry import register_strategy, set_default
 
 
 def _pad_grid(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
+    """Zero-pad the grid to the response's linear-convolution size.
+
+    The single upcast of the convolve stage happens here: FFT kernels only
+    accept f32/f64 inputs (``rfft2`` rejects bfloat16 outright), so narrow
+    grids (``cfg.patch_dtype="bfloat16"`` paths) widen to float32 before
+    the transform and BOTH strategies return the widened dtype — identical
+    math, identical output dtype, whatever the input precision.
+    """
     w, t = grid.shape
     wp, tp = resp.pad_shape
+    if grid.dtype not in (jnp.float32, jnp.float64):
+        grid = grid.astype(jnp.float32)
     return jnp.zeros((wp, tp), grid.dtype).at[:w, :t].set(grid)
 
 
@@ -60,10 +70,14 @@ def _full_spectrum(half: jax.Array, tp: int) -> jax.Array:
 def fft_convolve_fft2(grid: jax.Array, resp: DetectorResponse) -> jax.Array:
     w, t = grid.shape
     wp, tp = resp.pad_shape
-    freq = jnp.fft.fft2(_pad_grid(grid, resp).astype(jnp.complex64))
+    padded = _pad_grid(grid, resp)  # upcasts narrow grids, same as rfft2
+    freq = jnp.fft.fft2(padded.astype(jnp.complex64))
     rfreq = _full_spectrum(resp.freq, tp)
     out = jnp.real(jnp.fft.ifft2(freq * rfreq))
-    return out[:w, :t].astype(grid.dtype)
+    # return the PADDED dtype (f32 for narrow inputs), matching rfft2 —
+    # downcasting back to e.g. bfloat16 here made the two strategies
+    # disagree on output dtype for the same input
+    return out[:w, :t].astype(padded.dtype)
 
 
 set_default("fft_convolve", "rfft2")
@@ -86,7 +100,10 @@ def fft_convolve(grid: jax.Array, resp: DetectorResponse,
     elif strategy == "auto":
         shape = {"num_wires": grid.shape[0], "num_ticks": grid.shape[1],
                  "response_wires": resp.kernel.shape[0],
-                 "response_ticks": resp.kernel.shape[1]}
+                 "response_ticks": resp.kernel.shape[1],
+                 # plane kind keys the decision: induction and collection
+                 # transforms are different problems to the tuner
+                 "plane": resp.plane}
         strategy = autotune.resolve("fft_convolve", None,
                                     shape=shape).strategy
     try:

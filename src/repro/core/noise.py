@@ -4,6 +4,21 @@ Wire-Cell generates noise in the frequency domain from a measured amplitude
 spectrum with random phases, then inverse-FFTs per channel. We reproduce that
 structure with a synthetic 1/f-plus-plateau spectrum shaped by the electronics
 response.
+
+Normalization (Parseval). For a real length-``n`` signal built from its
+rfft half-spectrum ``X`` (``irfft``), Parseval reads
+
+    sum_t x_t^2 = (1/n) * sum_k w_k |X_k|^2
+
+with ``w_k = 2`` for interior bins (each appears twice in the full
+spectrum) and ``w_k = 1`` for the self-conjugate DC and (even ``n``)
+Nyquist bins. We draw ``X_k = (re + i*im) * amp_k / sqrt(2)`` so
+``E|X_k|^2 = amp_k^2`` on interior bins; DC/Nyquist carry no imaginary
+part (a Hermitian spectrum requires them real), so there
+``E|X_k|^2 = amp_k^2 / 2``. ``noise_spectrum`` scales ``amp`` so the
+expected time-domain RMS equals ``cfg.noise_rms_adc`` exactly
+(realized RMS is within a fraction of a percent at production sizes —
+pinned to 5% in ``tests/test_core_sim.py``).
 """
 from __future__ import annotations
 
@@ -13,24 +28,64 @@ import jax.numpy as jnp
 from repro.config import LArTPCConfig
 
 
+def _parseval_weights(num_ticks: int) -> jax.Array:
+    """Effective per-rfft-bin weight w_k with E[sum_t x_t^2] =
+    (1/n) * sum_k w_k amp_k^2 for the spectrum draw in the module doc.
+
+    Interior bins: full-spectrum multiplicity 2 and E|X_k|^2 = amp_k^2,
+    so w_k = 2. The self-conjugate DC bin — and the Nyquist bin when
+    ``num_ticks`` is even — appears once and carries half the variance
+    (imaginary part zeroed), so w_k = 1 * 1/2 = 0.5.
+    """
+    nfreq = num_ticks // 2 + 1
+    w = jnp.full((nfreq,), 2.0, jnp.float32)
+    w = w.at[0].set(0.5)
+    if num_ticks % 2 == 0:
+        w = w.at[-1].set(0.5)
+    return w
+
+
 def noise_spectrum(cfg: LArTPCConfig) -> jax.Array:
-    """Amplitude spectrum (num_ticks//2+1,) — 1/f + white, shaped."""
-    nfreq = cfg.num_ticks // 2 + 1
+    """Amplitude spectrum (num_ticks//2+1,) — 1/f + white, shaped.
+
+    Scaled so a ``simulate_noise`` realization has expected time-domain RMS
+    ``cfg.noise_rms_adc``: Parseval gives ``E[mean_t x^2] =
+    sum_k w_k amp_k^2 / n^2`` for the spectrum draw described in the
+    module docstring, so ``amp`` is scaled by
+    ``rms * n / sqrt(sum(w * amp^2))``.
+    """
+    n = cfg.num_ticks
+    nfreq = n // 2 + 1
     f = jnp.arange(nfreq, dtype=jnp.float32) + 1.0
     amp = 1.0 / jnp.sqrt(f) + 0.3
     # suppress very high frequency (anti-aliasing of the shaper)
     amp = amp * jnp.exp(-((f / nfreq) ** 2) * 2.0)
-    # normalize so time-domain RMS == cfg.noise_rms_adc
-    rms = jnp.sqrt(jnp.sum(amp**2) / cfg.num_ticks) / jnp.sqrt(cfg.num_ticks)
-    return amp * (cfg.noise_rms_adc / (rms * cfg.num_ticks + 1e-30)) * cfg.num_ticks
+    w = _parseval_weights(n)
+    norm = cfg.noise_rms_adc * n / jnp.sqrt(jnp.sum(w * amp**2) + 1e-30)
+    return amp * norm
+
+
+def sample_noise_rows(key: jax.Array, n_rows: int, amp: jax.Array,
+                      num_ticks: int) -> jax.Array:
+    """(n_rows, num_ticks) realizations of the given amplitude spectrum —
+    the ONE place the frequency-domain draw and its Parseval-critical
+    details live (shared by ``simulate_noise`` and the distributed
+    executor's per-shard noise stage)."""
+    nfreq = num_ticks // 2 + 1
+    k1, k2 = jax.random.split(key)
+    re = jax.random.normal(k1, (n_rows, nfreq))
+    im = jax.random.normal(k2, (n_rows, nfreq))
+    # a Hermitian spectrum has real DC (and, for even n, Nyquist) bins;
+    # imaginary parts there would be silently discarded by irfft, skewing
+    # the Parseval accounting
+    im = im.at[:, 0].set(0.0)
+    if num_ticks % 2 == 0:
+        im = im.at[:, -1].set(0.0)
+    spec = (re + 1j * im) * amp[None, :] * 0.7071067811865476
+    return jnp.fft.irfft(spec, n=num_ticks, axis=-1).astype(jnp.float32)
 
 
 def simulate_noise(key: jax.Array, cfg: LArTPCConfig) -> jax.Array:
     """(num_wires, num_ticks) correlated noise realization."""
-    nfreq = cfg.num_ticks // 2 + 1
-    amp = noise_spectrum(cfg)
-    k1, k2 = jax.random.split(key)
-    re = jax.random.normal(k1, (cfg.num_wires, nfreq))
-    im = jax.random.normal(k2, (cfg.num_wires, nfreq))
-    spec = (re + 1j * im) * amp[None, :] * 0.7071067811865476
-    return jnp.fft.irfft(spec, n=cfg.num_ticks, axis=-1).astype(jnp.float32)
+    return sample_noise_rows(key, cfg.num_wires, noise_spectrum(cfg),
+                             cfg.num_ticks)

@@ -136,15 +136,21 @@ set_default("charge_grid", "unfused")
 # ---------------------------------------------------------------------------
 
 
-def simulate_fig4(key: jax.Array, depos, resp: DetectorResponse,
-                  cfg: LArTPCConfig, pool: Optional[jax.Array] = None,
+def simulate_fig4(key: jax.Array, depos, resp=None,
+                  cfg: Optional[LArTPCConfig] = None,
+                  pool: Optional[jax.Array] = None,
                   add_noise: bool = True) -> SimOutput:
     """The batched device-resident pipeline (paper Fig. 4). jit-able end to end.
 
     One ``SimGraph.run`` of the canonical stage chain; ``depos`` may be a
     detector-frame ``DepoSet`` or a physical ``PhysicalDepoSet`` (the drift
-    stage transports the latter).
+    stage transports the latter). ``resp`` is a single ``DetectorResponse``
+    (single-plane), a per-plane sequence (multi-plane), or None for the
+    config defaults; multi-plane outputs carry a leading plane axis.
     """
+    if cfg is None:
+        # cfg defaults to None only so resp can be omitted positionally
+        raise TypeError("simulate_fig4() missing required argument: 'cfg'")
     graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
     return graph.run(key, depos)
 
@@ -216,19 +222,22 @@ def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
     from repro.tune import resolve_config
 
     cfg = resolve_config(cfg)
-    resp = resp if resp is not None else make_response(cfg)
-    # build_sim_graph supplies the standard RNG pool when cfg asks for it
+    # build_sim_graph supplies the standard RNG pool when cfg asks for it,
+    # and the per-plane default responses when resp is None
     graph = build_sim_graph(cfg, resp, add_noise=add_noise)
     return jax.jit(graph.run, donate_argnums=(0, 1) if donate else ())
 
 
 def simulate(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
-             resp: Optional[DetectorResponse] = None, add_noise: bool = True,
-             **kw) -> SimOutput:
+             resp=None, add_noise: bool = True, **kw) -> SimOutput:
     from repro.tune import resolve_config
 
     cfg = resolve_config(cfg)
-    resp = resp if resp is not None else make_response(cfg)
     if cfg.pipeline == "fig3":
+        if cfg.num_planes > 1:
+            raise ValueError(
+                "the fig3 per-depo host-loop baseline is single-plane only; "
+                "use pipeline='fig4' for multi-plane configs")
+        resp = resp if resp is not None else make_response(cfg)
         return simulate_fig3(key, depos, resp, cfg, add_noise=add_noise, **kw)
     return simulate_fig4(key, depos, resp, cfg, add_noise=add_noise, **kw)

@@ -20,6 +20,9 @@ class DetectorResponse(NamedTuple):
     kernel: jax.Array       # (response_wires, response_ticks) real-space response
     freq: jax.Array         # rfft2 of the kernel at padded grid shape (complex64)
     pad_shape: tuple        # (W_pad, T_pad) padded grid shape for linear conv
+    plane: str = "induction"  # field-response type this transform encodes
+    #                          ("induction" | "collection") — part of the
+    #                          fft_convolve tuning key (repro.tune)
 
 
 def _semigaussian(t_us: jax.Array, shaping_us: float = 2.0, order: int = 4) -> jax.Array:
@@ -78,7 +81,16 @@ def make_response(cfg: LArTPCConfig, plane: str = "induction") -> DetectorRespon
     # center the wire axis so output is aligned (roll by half the wire span)
     kpad = jnp.roll(kpad, shift=-(rw // 2), axis=0)
     freq = jnp.fft.rfft2(kpad)
-    return DetectorResponse(kernel=kernel, freq=freq, pad_shape=(w_pad, t_pad))
+    return DetectorResponse(kernel=kernel, freq=freq, pad_shape=(w_pad, t_pad),
+                            plane=plane)
+
+
+def make_plane_responses(cfg: LArTPCConfig):
+    """One ``DetectorResponse`` per readout plane of ``cfg``, in plane order
+    (bipolar for induction planes, unipolar for the collection plane)."""
+    from repro.config import plane_specs
+
+    return tuple(make_response(cfg, plane=s.kind) for s in plane_specs(cfg))
 
 
 def make_distributed_response(cfg: LArTPCConfig, w_pad: int,
@@ -97,4 +109,12 @@ def make_distributed_response(cfg: LArTPCConfig, w_pad: int,
     kpad = jnp.roll(kpad, shift=-(rw // 2), axis=0)
     freq = jnp.fft.rfft2(kpad)  # (w_pad, num_ticks//2+1)
     return DetectorResponse(kernel=base.kernel, freq=freq,
-                            pad_shape=(w_pad, cfg.num_ticks))
+                            pad_shape=(w_pad, cfg.num_ticks), plane=plane)
+
+
+def make_distributed_plane_responses(cfg: LArTPCConfig, w_pad: int):
+    """Per-plane responses at the distributed grid shape, in plane order."""
+    from repro.config import plane_specs
+
+    return tuple(make_distributed_response(cfg, w_pad, plane=s.kind)
+                 for s in plane_specs(cfg))

@@ -41,7 +41,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import LArTPCConfig
+from repro.config import LArTPCConfig, plane_specs
 from repro.core.depo import DepoSet
 from repro.core.fft_conv import digitize, fft_convolve
 from repro.core.noise import simulate_noise
@@ -52,6 +52,10 @@ STAGE_ORDER = ("drift", "charge_grid", "convolve", "noise", "digitize")
 
 
 class SimOutput(NamedTuple):
+    """Simulation result. Single-plane configs (``num_planes == 1``) keep
+    the seed 2-D layout; multi-plane configs carry a leading plane axis on
+    every leaf: adc (P, num_wires, num_ticks), etc."""
+
     adc: jax.Array        # (num_wires, num_ticks) int16
     signal: jax.Array     # (num_wires, num_ticks) float32 pre-digitization
     charge_grid: jax.Array  # S(t,x) after scatter-add
@@ -180,18 +184,88 @@ class SimGraph:
 
 # ---------------------------------------------------------------------------
 # Stage factories — the default (single-device fig4) implementations
+#
+# Multi-plane configs (``cfg.num_planes > 1``) run every readout stage once
+# per plane inside ONE stage fn — a static Python loop over ``plane_specs``
+# with stacked (P, ...) state leaves — so the graph shape, the executors,
+# and the timing boards stay plane-count agnostic. ``planes`` restricts a
+# multi-plane graph to a subset of plane indices (the per-plane cost boards
+# build one-plane graphs this way); it has no effect on single-plane
+# configs, whose stages are byte-for-byte the seed implementations.
 # ---------------------------------------------------------------------------
 
 
-def drift_stage(cfg: LArTPCConfig) -> Stage:
-    """Transport physical depos to the readout plane; pass through depos
+def _selected_specs(cfg: LArTPCConfig, planes: Optional[Tuple[int, ...]]):
+    specs = plane_specs(cfg)
+    if planes is None:
+        return specs
+    return tuple(specs[p] for p in planes)
+
+
+def _as_plane_responses(cfg: LArTPCConfig, resp,
+                        planes: Optional[Tuple[int, ...]]):
+    """Normalize ``resp`` to one response per selected plane.
+
+    None builds the defaults (``make_response`` per plane type); a single
+    ``DetectorResponse`` is accepted only for single-plane configs — a lone
+    transform cannot cover induction *and* collection planes, so passing
+    one to a multi-plane graph is an error, not a silent broadcast.
+    """
+    from repro.core.response import make_response
+
+    specs = _selected_specs(cfg, planes)
+    if resp is None:
+        return tuple(make_response(cfg, plane=s.kind) for s in specs)
+    if isinstance(resp, DetectorResponse):
+        if len(specs) != 1:
+            raise ValueError(
+                f"config has {len(specs)} selected planes but got a single "
+                "DetectorResponse; pass make_plane_responses(cfg) (or None "
+                "to build the per-plane defaults)")
+        return (resp,)
+    resps = tuple(resp)
+    if len(resps) != len(specs):
+        raise ValueError(f"got {len(resps)} responses for {len(specs)} "
+                         "selected planes")
+    return resps
+
+
+def drift_stage(cfg: LArTPCConfig,
+                planes: Optional[Tuple[int, ...]] = None) -> Stage:
+    """Transport physical depos to the readout plane(s); pass through depos
     that already arrived (an input DepoSet), so every executor accepts both
-    physical- and detector-frame input."""
-    from repro.core.drift import PhysicalDepoSet, transport
+    physical- and detector-frame input. Multi-plane configs project each
+    physical depo onto every selected plane (leading plane axis on the
+    output DepoSet); pre-drifted input must already carry that axis."""
+    from repro.core.drift import PhysicalDepoSet, transport, transport_planes
+
+    multi = cfg.num_planes > 1
 
     def fn(state: SimState) -> SimState:
         if isinstance(state.depos, PhysicalDepoSet):
-            return state._replace(depos=transport(state.depos, cfg))
+            depos = (transport_planes(state.depos, cfg, planes=planes)
+                     if multi else transport(state.depos, cfg))
+            return state._replace(depos=depos)
+        if multi:
+            if state.depos.wire.ndim < 2:
+                raise ValueError(
+                    "multi-plane config fed a planeless DepoSet; pass a "
+                    "PhysicalDepoSet (the drift stage projects it onto "
+                    "every plane) or a DepoSet with a leading plane axis "
+                    "(e.g. generate_plane_depos)")
+            n_in = state.depos.wire.shape[-2]
+            if n_in != cfg.num_planes:
+                raise ValueError(
+                    f"pre-drifted depos carry {n_in} planes but the config "
+                    f"has num_planes={cfg.num_planes}; pre-drifted input "
+                    "always carries the FULL plane axis (a plane-restricted "
+                    "graph selects from it here)")
+            if planes is not None:
+                # select the restricted planes so downstream stages'
+                # positional plane loop lines up with the selected specs
+                sel = jnp.asarray(planes)
+                return state._replace(depos=jax.tree.map(
+                    lambda x: x[..., sel, :], state.depos))
         return state
 
     return Stage("drift", fn, op="drift")
@@ -210,35 +284,71 @@ def compute_charge_grid(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
 
 
 def charge_grid_stage(cfg: LArTPCConfig,
-                      pool: Optional[jax.Array] = None) -> Stage:
+                      pool: Optional[jax.Array] = None,
+                      planes: Optional[Tuple[int, ...]] = None) -> Stage:
     """depos -> S(t,x): rasterize + fluctuate + scatter-add (or the fused
-    kernel), dispatched through the ``charge_grid`` strategy registry."""
+    kernel), dispatched through the ``charge_grid`` strategy registry.
+
+    Multi-plane: one dispatch per plane over the depos' plane axis, each
+    with a plane-folded subkey (``fold_in(kf, plane_index)``) so electron
+    fluctuations are independent per plane; grids stack to (P, W, T).
+    (The paper-faithful ``pool`` stream reuses the one pool per plane,
+    matching its fixed-pool design across events.)"""
+    specs = _selected_specs(cfg, planes)
+    multi = cfg.num_planes > 1
 
     def fn(state: SimState) -> SimState:
-        return state._replace(
-            grid=compute_charge_grid(state.kf, state.depos, cfg, pool=pool))
+        if not multi:
+            return state._replace(grid=compute_charge_grid(
+                state.kf, state.depos, cfg, pool=pool))
+        grids = []
+        for i, spec in enumerate(specs):
+            kf = jax.random.fold_in(state.kf, spec.index)
+            depos_p = jax.tree.map(lambda x, i=i: x[i], state.depos)
+            grids.append(compute_charge_grid(kf, depos_p, cfg, pool=pool))
+        return state._replace(grid=jnp.stack(grids))
 
     return Stage("charge_grid", fn, op="charge_grid")
 
 
-def convolve_stage(cfg: LArTPCConfig, resp: DetectorResponse) -> Stage:
+def convolve_stage(cfg: LArTPCConfig, resp,
+                   planes: Optional[Tuple[int, ...]] = None) -> Stage:
     """S(t,x) -> M(t,x): frequency-domain convolution with the detector
-    response, dispatched through the ``fft_convolve`` strategy registry."""
+    response, dispatched through the ``fft_convolve`` strategy registry.
+
+    Multi-plane: ``resp`` is a per-plane sequence (bipolar induction /
+    unipolar collection transforms), one convolution per plane."""
+    multi = cfg.num_planes > 1
+    resps = _as_plane_responses(cfg, resp, planes)
 
     def fn(state: SimState) -> SimState:
-        return state._replace(
-            signal=fft_convolve(state.grid, resp, cfg.fft_strategy))
+        if not multi:
+            return state._replace(
+                signal=fft_convolve(state.grid, resps[0], cfg.fft_strategy))
+        signal = jnp.stack([
+            fft_convolve(state.grid[i], r, cfg.fft_strategy)
+            for i, r in enumerate(resps)])
+        return state._replace(signal=signal)
 
     return Stage("convolve", fn, op="fft_convolve")
 
 
-def noise_stage(cfg: LArTPCConfig) -> Stage:
-    """Add frequency-shaped electronics noise to the signal."""
+def noise_stage(cfg: LArTPCConfig,
+                planes: Optional[Tuple[int, ...]] = None) -> Stage:
+    """Add frequency-shaped electronics noise to the signal (multi-plane:
+    an independent realization per plane via plane-folded subkeys)."""
+    specs = _selected_specs(cfg, planes)
+    multi = cfg.num_planes > 1
 
     def fn(state: SimState) -> SimState:
-        noise = simulate_noise(state.kn, cfg) / jnp.maximum(
-            cfg.adc_per_electron, 1e-30)
-        return state._replace(signal=state.signal + noise)
+        denom = jnp.maximum(cfg.adc_per_electron, 1e-30)
+        if not multi:
+            return state._replace(
+                signal=state.signal + simulate_noise(state.kn, cfg) / denom)
+        noise = jnp.stack([
+            simulate_noise(jax.random.fold_in(state.kn, spec.index), cfg)
+            for spec in specs])
+        return state._replace(signal=state.signal + noise / denom)
 
     return Stage("noise", fn)
 
@@ -252,14 +362,22 @@ def digitize_stage(cfg: LArTPCConfig) -> Stage:
     return Stage("digitize", fn)
 
 
-def build_sim_graph(cfg: LArTPCConfig, resp: DetectorResponse,
+def build_sim_graph(cfg: LArTPCConfig, resp=None,
                     pool: Optional[jax.Array] = None, add_noise: bool = True,
                     overrides: Optional[Dict[str, Callable | Stage]] = None,
+                    planes: Optional[Tuple[int, ...]] = None,
                     ) -> SimGraph:
     """Assemble the canonical ``drift -> charge_grid -> convolve -> noise ->
     digitize`` chain. This is the ONLY place the stage order is written down;
     every executor (single / batched / distributed / streaming) runs the
     graph this returns.
+
+    ``resp`` is the detector response: a single ``DetectorResponse`` for
+    single-plane configs, a per-plane sequence for multi-plane configs, or
+    None to build the per-plane-type defaults. Multi-plane configs
+    (``cfg.num_planes > 1``) run each readout stage per plane and stack a
+    leading plane axis onto every ``SimOutput`` leaf; ``planes`` restricts
+    the graph to a subset of plane indices (per-plane cost boards).
 
     ``add_noise=False`` drops the noise stage (rather than running it as an
     identity), so timing boards and traced programs only contain real work.
@@ -279,12 +397,12 @@ def build_sim_graph(cfg: LArTPCConfig, resp: DetectorResponse,
 
         pool = fl.make_pool(jax.random.key(1234))
     stages = [
-        drift_stage(cfg),
-        charge_grid_stage(cfg, pool=pool),
-        convolve_stage(cfg, resp),
+        drift_stage(cfg, planes=planes),
+        charge_grid_stage(cfg, pool=pool, planes=planes),
+        convolve_stage(cfg, resp, planes=planes),
     ]
     if add_noise:
-        stages.append(noise_stage(cfg))
+        stages.append(noise_stage(cfg, planes=planes))
     stages.append(digitize_stage(cfg))
     graph = SimGraph(stages=tuple(stages))
     if overrides:

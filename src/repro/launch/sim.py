@@ -33,6 +33,7 @@ from repro.config import LArTPCConfig, apply_overrides, get_config
 from repro.core import generate_depos, simulate
 from repro.core.batch import (empty_event, event_keys, make_batched_sim_fn,
                               pack_events, shard_events)
+from repro.core.depo import generate_plane_depos
 from repro.core.response import make_response
 
 
@@ -67,13 +68,17 @@ def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
     # fixed depo padding across batches -> a single compiled program
     pad_to = pad_to if pad_to is not None else cfg.num_depos
 
+    # multi-plane configs stream per-plane pre-drifted events (leading
+    # plane axis on every leaf) through the same packed-batch machinery
+    gen = (generate_plane_depos if cfg.num_planes > 1 else generate_depos)
+
     def make_batch(b: int):
         ids = list(range(b * batch_events,
                          min((b + 1) * batch_events, num_events)))
-        events = [generate_depos(jax.random.fold_in(key, ev), cfg)
-                  for ev in ids]
+        events = [gen(jax.random.fold_in(key, ev), cfg) for ev in ids]
         n_valid = len(ids)
-        events += [empty_event()] * (batch_events - n_valid)
+        events += [empty_event(planes=cfg.num_planes)] * (
+            batch_events - n_valid)
         ids += list(range(num_events + b * batch_events,
                           num_events + b * batch_events + batch_events - n_valid))
         return ids, n_valid, pack_events(events, pad_to=pad_to)
@@ -133,6 +138,9 @@ def main():
     ap.add_argument("--batch-events", type=int, default=1,
                     help="events per device launch (vmap batch size E)")
     ap.add_argument("--depos", type=int, default=0)
+    ap.add_argument("--planes", type=int, default=0,
+                    help="readout planes per event (1 = seed single-plane; "
+                         "3 = MicroBooNE-like U/V/W triple)")
     ap.add_argument("--pipeline", choices=["fig3", "fig4"], default=None)
     ap.add_argument("--tune", action="store_true",
                     help="autotune kernel strategies for this config/backend "
@@ -153,6 +161,8 @@ def main():
     cfg = get_config("lartpc-uboone", smoke=args.smoke)
     if args.depos:
         cfg = apply_overrides(cfg, {"num_depos": args.depos})
+    if args.planes:
+        cfg = apply_overrides(cfg, {"num_planes": args.planes})
     if args.pipeline:
         cfg = apply_overrides(cfg, {"pipeline": args.pipeline})
     if args.set:
@@ -176,17 +186,25 @@ def main():
 
     if args.stage_board:
         from repro.core import build_sim_graph, generate_physical_depos
-        from repro.core.response import make_response
         from repro.tune import resolve_config
 
         rcfg = resolve_config(cfg)
-        graph = build_sim_graph(rcfg, make_response(rcfg))
+        graph = build_sim_graph(rcfg)
         key = jax.random.key(args.seed)
-        _, timings = graph.timed(key, generate_physical_depos(key, rcfg))
+        pdepos = generate_physical_depos(key, rcfg)
+        _, timings = graph.timed(key, pdepos)
         total = sum(timings.values())
         for name, sec in timings.items():
             print(f"stage {name:<12} {sec * 1e3:8.2f} ms "
                   f"({100 * sec / total:5.1f}%)")
+        if rcfg.num_planes > 1:
+            # per-plane rows — the papers' per-plane cost tables: the same
+            # graph restricted to one plane at a time
+            for p in range(rcfg.num_planes):
+                _, pt = build_sim_graph(rcfg, planes=(p,)).timed(key, pdepos)
+                for name, sec in pt.items():
+                    print(f"stage plane{p}/{name:<10} {sec * 1e3:8.2f} ms "
+                          f"({100 * sec / total:5.1f}%)")
 
     if cfg.pipeline == "fig3":
         _run_fig3(cfg, args.events, args.seed)

@@ -99,8 +99,13 @@ def _bucket(n: int) -> int:
     return 0 if n <= 0 else 1 << (int(n) - 1).bit_length()
 
 
-def shape_bucket(shape: Mapping[str, int]) -> str:
-    return ";".join(f"{k}={_bucket(v)}" for k, v in sorted(shape.items()))
+def shape_bucket(shape: Mapping[str, object]) -> str:
+    """Numeric dims bucket to the next power of two; categorical dims
+    (e.g. the fft_convolve ``plane`` kind) pass through verbatim."""
+    return ";".join(
+        f"{k}={v}" if isinstance(v, str) else f"{k}={_bucket(v)}"
+        for k, v in sorted(shape.items())
+    )
 
 
 def cache_key(
@@ -125,11 +130,22 @@ def op_shape(op: str, cfg) -> Dict[str, int]:
             "patch_ticks": cfg.patch_ticks,
         }
     if op == "fft_convolve":
+        from repro.config import plane_specs
+
         return {
             "num_wires": cfg.num_wires,
             "num_ticks": cfg.num_ticks,
             "response_wires": cfg.response_wires,
             "response_ticks": cfg.response_ticks,
+            # the response TYPE is part of the problem: a decision timed
+            # against the bipolar induction transform must not key
+            # collection-plane dispatches. This default is the first
+            # plane's kind (the readout plane of a single-plane config);
+            # multi-plane "auto" configs never bake one answer into the
+            # field — resolve_config leaves "auto" so every convolve
+            # dispatch resolves with plane=resp.plane, and tuning runs
+            # once per distinct kind (``_resolve_fft_per_plane``)
+            "plane": plane_specs(cfg)[0].kind,
         }
     raise KeyError(f"no shape extractor for op {op!r}")
 
@@ -221,7 +237,10 @@ def _fft_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
     from repro.core.response import make_response
 
     del sample_depos
-    resp = make_response(cfg)
+    # time against the response the decision is keyed to: the tuning shape
+    # carries the plane kind, so collection-plane tunings measure the
+    # collection transform instead of silently reusing induction
+    resp = make_response(cfg, plane=ctx.shape.get("plane", "induction"))
     shape = (cfg.num_wires, cfg.num_ticks)
     grid = jax.random.uniform(jax.random.key(2), shape)
 
@@ -456,6 +475,28 @@ def resolve_config_with_decisions(
     for op, fld in OP_FIELDS.items():
         if tune and tune_explicit and getattr(cfg, fld) != "auto":
             cfg = dataclasses.replace(cfg, **{fld: "auto"})
+        if (
+            op == "fft_convolve"
+            and getattr(cfg, "num_planes", 1) > 1
+            and getattr(cfg, fld) == "auto"
+        ):
+            # Multi-plane: ONE config field cannot name a per-plane winner,
+            # so "auto" stays in the config and each convolve dispatch
+            # resolves from the cache with its own plane key at trace time
+            # (fft_convolve's auto path only reads cache/defaults — it
+            # never times). Tuning here measures every distinct plane kind
+            # so those per-plane cache entries exist before jit.
+            decisions.extend(
+                _resolve_fft_per_plane(
+                    cfg,
+                    tune=tune,
+                    cache=cache,
+                    timer=timer,
+                    force=force,
+                    sample_depos=sample_depos,
+                )
+            )
+            continue
         d = resolve(
             op,
             cfg,
@@ -469,3 +510,37 @@ def resolve_config_with_decisions(
         if getattr(cfg, fld) != d.strategy:
             cfg = dataclasses.replace(cfg, **{fld: d.strategy})
     return cfg, decisions
+
+
+def _resolve_fft_per_plane(
+    cfg,
+    *,
+    tune: bool,
+    cache: TuneCache,
+    timer: Optional[Timer],
+    force: bool,
+    sample_depos: Optional[int],
+):
+    """One fft_convolve decision per distinct plane kind of a multi-plane
+    config (the field itself stays "auto"; see the caller)."""
+    from repro.config import plane_specs
+
+    decisions = []
+    for kind in sorted({s.kind for s in plane_specs(cfg)}):
+        shape = dict(op_shape("fft_convolve", cfg), plane=kind)
+        if tune:
+            d = tune_op(
+                "fft_convolve",
+                cfg,
+                cache=cache,
+                timer=timer,
+                force=force,
+                sample_depos=sample_depos,
+                shape=shape,
+            )
+        else:
+            # cache/default lookup only — cfg=None skips the explicit-name
+            # branch (the field is "auto" by construction here)
+            d = resolve("fft_convolve", None, cache=cache, shape=shape)
+        decisions.append(d)
+    return decisions
