@@ -11,13 +11,18 @@ repo's committed ``BENCH_pipeline.json``:
 ``--record`` values may be shell-style globs (fnmatch): a pattern expands
 against the union of baseline and fresh record names, so families of rows —
 e.g. the per-plane stage rows ``'stages/fig4_smoke3p_plane*_total_fused'``
-— are gated without enumerating each plane. A glob matching nothing fails
-loudly (a vanished family is a regression too).
+— are gated without enumerating each plane. A glob must match at least one
+*committed baseline* record, else the gate fails loudly: a glob that only
+matches fresh rows is gating nothing (the committed family vanished — or
+was never committed — and every run would silently pass as "(new)").
 
 Exit status 1 (with a diff table) when fresh/baseline exceeds the ratio for
 any watched record; records missing from the fresh run also fail (a silently
-vanished benchmark is a regression too). Records missing from the *baseline*
-only warn — new benchmarks land before their baseline numbers do.
+vanished benchmark is a regression too). A plain (non-glob) record name
+found in *neither* file fails — a watched name that matches nothing is a
+typo or a removed benchmark, not a gate. Names missing from the baseline
+but present in fresh only warn — new benchmarks land before their baseline
+numbers do.
 """
 from __future__ import annotations
 
@@ -36,7 +41,11 @@ def load_records(path: str) -> dict:
 
 def expand_records(patterns: list, baseline: dict, fresh: dict) -> list:
     """Expand glob patterns against all known record names (plain names
-    pass through so a fully missing record still reports as MISSING)."""
+    pass through so a fully missing record still reports as MISSING).
+
+    Returns [] — which the caller treats as failure — when a glob matches
+    no *baseline* record: fresh-only matches would render as warn-only
+    "(new)" rows, so such a glob gates nothing run after run."""
     known = sorted(set(baseline) | set(fresh))
     names: list = []
     for pat in patterns:
@@ -45,6 +54,12 @@ def expand_records(patterns: list, baseline: dict, fresh: dict) -> list:
             if not hits:
                 print(f"error: --record pattern {pat!r} matched no records",
                       file=sys.stderr)
+                return []
+            if not any(h in baseline for h in hits):
+                print(f"error: --record pattern {pat!r} matched no "
+                      "BASELINE records (fresh-only matches warn instead "
+                      "of gating) — commit the baseline rows or fix the "
+                      "pattern", file=sys.stderr)
                 return []
             names.extend(h for h in hits if h not in names)
         elif pat not in names:
@@ -63,8 +78,14 @@ def check(baseline_path: str, fresh_path: str, records: list,
     print(f"{'record':<40} {'baseline_us':>12} {'fresh_us':>12} {'ratio':>7}")
     for name in records:
         if name not in baseline:
-            print(f"{name:<40} {'(new)':>12} "
-                  f"{fresh.get(name, float('nan')):>12.1f} {'--':>7}")
+            if name not in fresh:
+                # a plain name in NEITHER file: nothing is being gated —
+                # typo or removed benchmark, either way fail loudly
+                print(f"{name:<40} {'MISSING':>12} {'MISSING':>12} "
+                      f"{'--':>7}  FAIL")
+                failed = True
+                continue
+            print(f"{name:<40} {'(new)':>12} {fresh[name]:>12.1f} {'--':>7}")
             continue
         if name not in fresh:
             print(f"{name:<40} {baseline[name]:>12.1f} {'MISSING':>12} "

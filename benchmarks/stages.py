@@ -123,17 +123,74 @@ def plane_boards(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
              f"plane={p};kind={spec.kind}")
 
 
+def recon_board(cfg: LArTPCConfig, tag: str, iters: int = 3) -> None:
+    """Recon-chain board: the fig4 graph extended with the deconvolve +
+    hit_find stages (``build_sim_graph(..., recon=True)``), per stage, plus
+    one row per registered hit_find strategy at this shape — the recon
+    analogue of the forward per-stage tables (the signal-processing
+    follow-ups report deconvolution + hit finding as their workload).
+    """
+    from repro.core.deconvolve import make_deconv_filter, measured_signal
+    from repro.core.hitfind import find_hits
+    from repro.tune import registry
+    from repro.tune.registry import TuneContext
+
+    cfg = resolve_config(cfg)
+    graph = build_sim_graph(cfg, make_response(cfg), recon=True)
+    key = jax.random.key(0)
+    pdepos = generate_physical_depos(key, cfg)
+    _, timings = graph.timed(key, pdepos, iters=iters)
+    total = sum(timings.values())
+    for name, sec in timings.items():
+        emit(f"stages/recon_{tag}_{name}", sec,
+             f"frac={sec / total:.3f};n={cfg.num_depos}")
+    fused = jax.jit(graph.run)
+    t = time_fn(lambda: fused(key, pdepos).hits.n_hits, iters=iters)
+    emit(f"stages/recon_{tag}_total_fused", t,
+         f"stage_sum_us={total * 1e6:.1f};n={cfg.num_depos}")
+
+    # per-strategy hit_find rows on a real deconvolved grid
+    out = fused(key, pdepos)
+    decon = out.decon if cfg.num_planes == 1 else out.decon[0]
+    ctx = TuneContext(cfg=cfg, backend=jax.default_backend(),
+                      device_kind=jax.devices()[0].device_kind,
+                      shape={"num_wires": int(decon.shape[0]),
+                             "num_ticks": int(decon.shape[1]),
+                             "max_hits_per_wire": cfg.max_hits_per_wire})
+    for name in sorted(registry.strategies("hit_find")):
+        strat = registry.get_strategy("hit_find", name)
+        if not strat.is_available(ctx):
+            continue
+        fn = jax.jit(lambda d, s=name: find_hits(d, cfg, s).n_hits)
+        t = time_fn(lambda: fn(decon), iters=iters)
+        emit(f"stages/recon_{tag}_hitfind_{name}", t,
+             f"wires={decon.shape[0]};ticks={decon.shape[1]}")
+
+    # deconvolve alone (ADC -> charge), per registered strategy
+    filt = make_deconv_filter(make_response(cfg), cfg)
+    adc = out.adc if cfg.num_planes == 1 else out.adc[0]
+    meas = jax.block_until_ready(measured_signal(adc, cfg))
+    from repro.core.deconvolve import deconvolve
+    for name in sorted(registry.strategies("deconvolve")):
+        fn = jax.jit(lambda m, s=name: deconvolve(m, filt, s))
+        t = time_fn(lambda: fn(meas), iters=iters)
+        emit(f"stages/recon_{tag}_deconv_{name}", t,
+             f"wires={meas.shape[0]};ticks={meas.shape[1]}")
+
+
 def main(full: bool = False):
     smoke = get_config("lartpc-uboone", smoke=True)
     stage_board(smoke, "smoke")
     batched_stage_board(smoke, "smoke")
     detector_frame_board(smoke, "smoke")
     plane_boards(smoke, "smoke")
+    recon_board(smoke, "smoke")
     if full:
         full_cfg = get_config("lartpc-uboone")
         stage_board(full_cfg, "full", iters=1)
         batched_stage_board(full_cfg, "full", e_sz=2, iters=1)
         plane_boards(full_cfg, "full", iters=1)
+        recon_board(full_cfg, "full", iters=1)
 
 
 if __name__ == "__main__":

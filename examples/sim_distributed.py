@@ -17,6 +17,9 @@ ap.add_argument("--smoke", action="store_true",
                 help="small grid/depo sizes (CI-friendly)")
 ap.add_argument("--planes", type=int, default=1,
                 help="readout planes (1 = seed single-plane, 3 = U/V/W)")
+ap.add_argument("--recon", action="store_true",
+                help="also run the recon stages (pencil-FFT deconvolve + "
+                     "per-shard hit finding) and report hit counts")
 args = ap.parse_args()
 
 os.environ["XLA_FLAGS"] = (
@@ -62,8 +65,20 @@ else:
 sharded = shard_depos(depos, mesh)
 print(f"depos sharded: {sharded[0].sharding}")
 
-sim = make_distributed_sim(mesh, cfg, resp)
-adc = sim(key, sharded)
+sim = make_distributed_sim(mesh, cfg, resp, recon=args.recon)
+if args.recon:
+    adc, decon, hits = sim(key, sharded)
+    print(f"decon out: {decon.shape} {decon.dtype}, "
+          f"sharding {decon.sharding}")
+    stored = int(np.asarray(hits.mask).sum())
+    found = int(np.asarray(hits.n_hits).sum())
+    print(f"hits: {stored} stored / {found} found "
+          f"(wires {int(np.asarray(hits.wire)[np.asarray(hits.mask)].min())}"
+          f"..{int(np.asarray(hits.wire)[np.asarray(hits.mask)].max())})"
+          if stored else "hits: none")
+    assert stored > 0, "distributed recon found no hits"
+else:
+    adc = sim(key, sharded)
 print(f"ADC out: {adc.shape} {adc.dtype}, sharding {adc.sharding}")
 a = np.asarray(adc)[..., :cfg.num_wires, :]
 planes = a.reshape((-1,) + a.shape[-2:])

@@ -212,6 +212,32 @@ class LArTPCConfig:
     # per-plane field-response type: "induction" (bipolar) | "collection"
     # (unipolar) — selects the plane's ``make_response`` kernel
     plane_types: Tuple[str, ...] = ("induction", "induction", "collection")
+    # ---- sim -> recon loop (ISSUE 6): deconvolution + hit finding ----
+    # frequency-domain filter applied with the inverse response:
+    #   wiener   : conj(R) / (|R|^2 + lambda * max|R|^2) — optimal-ish
+    #              inversion with bounded gain where |R| is small
+    #   gaussian : the same bounded inversion times a Gaussian low-pass
+    #              along the time-frequency axis (DC gain exactly 1)
+    deconv_filter: str = "wiener"
+    # Wiener regularizer, as a fraction of max |R|^2 over the spectrum;
+    # bounds the filter gain at 1 / (2 sqrt(lambda * max|R|^2))
+    deconv_wiener_lambda: float = 2e-3
+    # Gaussian low-pass cutoff, as a fraction of the time-axis Nyquist
+    deconv_gauss_cut: float = 0.25
+    # rfft2: direct half-spectrum inversion; fft_reuse: dispatch through the
+    # tuned fft_convolve machinery (inverse filter as a DetectorResponse);
+    # auto: tuning cache / backend default (plane-keyed, like fft_strategy)
+    deconv_strategy: str = "rfft2"
+    # scan: vectorized lax.scan threshold ROI finder (XLA); pallas: per-wire
+    # Pallas scan kernel; auto: resolve via the strategy registry
+    hitfind_strategy: str = "scan"
+    # hit threshold on the deconvolved charge, electrons per pixel; runs of
+    # consecutive above-threshold ticks on one wire become hits
+    hit_threshold: float = 500.0
+    # HitSet capacity per plane (mask-padded, fixed shape for jit/vmap)
+    max_hits: int = 4096
+    # per-wire ROI capacity before compaction into the global HitSet
+    max_hits_per_wire: int = 8
 
 
 class PlaneSpec(NamedTuple):

@@ -6,6 +6,10 @@ Stage chain (paper Eq. 1/2, composed as a ``SimGraph`` in ``stages.py``):
 
 Multi-plane configs (``cfg.num_planes > 1``) run the readout stages once
 per wire plane (U/V/W) and stack a leading plane axis on every output.
+
+Recon chain (``build_sim_graph(..., recon=True)`` — the signal-processing
+follow-up workload, arXiv:2002.06291 / 2107.00812):
+    ADC(t,x) --deconvolve--> Ŝ(t,x) --hit_find--> HitSet
 """
 from repro.core.depo import (DepoSet, generate_depos, generate_physical_depos,
                              generate_plane_depos)
@@ -17,6 +21,9 @@ from repro.core.stages import SimGraph, SimOutput, SimState, Stage, build_sim_gr
 from repro.core.pipeline import simulate, make_sim_fn
 from repro.core.batch import (EventBatch, event_keys, make_batched_sim_fn,
                               pack_events, shard_events, simulate_events)
+from repro.core.deconvolve import (deconvolve, make_deconv_filter,
+                                   make_plane_deconv_filters, measured_signal)
+from repro.core.hitfind import HitSet, compact_hits, find_hits, hits_to_tuples
 
 __all__ = [
     "DepoSet",
@@ -43,4 +50,12 @@ __all__ = [
     "shard_events",
     "simulate_events",
     "make_batched_sim_fn",
+    "deconvolve",
+    "make_deconv_filter",
+    "make_plane_deconv_filters",
+    "measured_signal",
+    "HitSet",
+    "compact_hits",
+    "find_hits",
+    "hits_to_tuples",
 ]

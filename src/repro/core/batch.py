@@ -157,17 +157,20 @@ def event_keys(key: jax.Array, event_ids: Sequence[int]) -> jax.Array:
 
 def simulate_events(keys: jax.Array, batch: EventBatch, resp: DetectorResponse,
                     cfg: LArTPCConfig, pool: Optional[jax.Array] = None,
-                    add_noise: bool = True,
+                    add_noise: bool = True, recon: bool = False,
                     graph: Optional[SimGraph] = None) -> SimOutput:
     """The canonical SimGraph for all E events in one program: vmap over the
     event axis (the batched executor of ``repro.core.stages``).
 
     keys : (E,) PRNG keys (one per event — events stay independent).
     Returns a SimOutput whose leaves carry a leading event axis:
-    adc (E, num_wires, num_ticks), etc.
+    adc (E, num_wires, num_ticks), etc. With ``recon=True`` the graph ends
+    in deconvolve + hit_find and ``decon``/``hits`` gain the event axis too
+    (HitSet leaves become (E, max_hits), n_hits (E,)).
     """
     if graph is None:
-        graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
+        graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise,
+                                recon=recon)
     depos = batch.depo_set()
 
     def ev_names(x):
@@ -176,15 +179,18 @@ def simulate_events(keys: jax.Array, batch: EventBatch, resp: DetectorResponse,
     depos = jax.tree.map(lambda x: logical(x, ev_names(x)), depos)
     keys = logical(keys, ("events",))
     out = jax.vmap(graph.run)(keys, depos)
-    return SimOutput(*(logical(x, ev_names(x)) for x in out))
+    # tree.map (not per-field) so nested recon leaves (the HitSet) get the
+    # event-axis constraint too and absent (None) fields pass through
+    return jax.tree.map(lambda x: logical(x, ev_names(x)), out)
 
 
 def make_batched_sim_fn(cfg: LArTPCConfig,
                         resp: Optional[DetectorResponse] = None,
-                        add_noise: bool = True, donate: bool = False):
+                        add_noise: bool = True, donate: bool = False,
+                        recon: bool = False):
     """jit'd ``sim(keys, batch) -> SimOutput`` closure (batched production
     path — the vmap executor over the same ``SimGraph`` ``make_sim_fn``
-    runs single-event).
+    runs single-event). ``recon=True`` appends deconvolve + hit_find.
 
     ``"auto"`` strategy fields resolve here, before jit, so one fixed traced
     program serves the whole stream (see ``repro.tune``).
@@ -199,7 +205,7 @@ def make_batched_sim_fn(cfg: LArTPCConfig,
     cfg = resolve_config(cfg)
     # build_sim_graph supplies the standard RNG pool when cfg asks for it,
     # and the per-plane default responses when resp is None
-    graph = build_sim_graph(cfg, resp, add_noise=add_noise)
+    graph = build_sim_graph(cfg, resp, add_noise=add_noise, recon=recon)
 
     @functools.partial(jax.jit, donate_argnums=(0, 1) if donate else ())
     def sim(keys, batch: EventBatch) -> SimOutput:

@@ -56,7 +56,7 @@ def padded_grid_shape(cfg: LArTPCConfig, nshards: int):
 def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
                          axes: Sequence[str] = ("data", "model"),
                          scatter_reduction: str = "psum_scatter",
-                         add_noise: bool = True):
+                         add_noise: bool = True, recon: bool = False):
     """Build the jit'd distributed sim: (key, depos sharded over `axes`) -> ADC.
 
     `resp` is the response at the *distributed* (W_pad, T) grid shape —
@@ -66,6 +66,18 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
     stage projects them onto every plane in-graph) and return a
     (num_planes, W_pad, T) ADC grid, plane axis replicated, wire axis
     sharded.
+
+    ``recon=True`` appends the deconvolve/hit_find stages with
+    collective-aware overrides and returns ``(adc, decon, hits)`` instead
+    of the bare ADC grid: deconvolve rides the SAME pencil-FFT path as the
+    forward convolve (the inverse filter is just another frequency-domain
+    multiply, at the distributed cyclic shape); hit finding is wire-local
+    per shard — each shard scans its own wires with a per-shard HitSet
+    capacity of ceil(max_hits / nshards) and its global wire offset, and
+    the shards' hits concatenate along the capacity axis (hit *positions*
+    therefore differ from the single-device compaction; the masked hit set
+    is what matches). ``hits.n_hits`` is summed over shards to the global
+    candidate count, () single-plane / (P,) multi-plane.
 
     scatter_reduction:
       psum_scatter : each device scatter-adds its depos into a full-size
@@ -228,21 +240,86 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
     overrides = {"charge_grid": dist_charge_grid, "convolve": dist_convolve}
     if add_noise:
         overrides["noise"] = dist_noise
+
+    if recon:
+        from repro.core.deconvolve import make_deconv_filter, measured_signal
+        from repro.core.hitfind import find_hits
+
+        # per-plane inverse filters at the distributed cyclic shape: the
+        # resp(s) passed in ARE that shape, so the filters inherit it
+        gfreqs = [make_deconv_filter(r, cfg).freq
+                  for r in (resps if multi else [resp])]
+        cap_shard = -(-cfg.max_hits // nshards)
+
+        def _deconv_one(adc_local, gfreq):
+            # the inverse filter is just another frequency-domain multiply:
+            # reuse the forward pencil-FFT chain verbatim
+            return _convolve_one(measured_signal(adc_local, cfg), gfreq)
+
+        def dist_deconvolve(state: SimState) -> SimState:
+            if not multi:
+                return state._replace(
+                    decon=_deconv_one(state.adc, gfreqs[0]))
+            return state._replace(decon=jnp.stack([
+                _deconv_one(state.adc[i], gfreqs[i])
+                for i in range(len(gfreqs))]))
+
+        def _hits_one(decon_local):
+            me = _flat_index(axes, mesh)
+            off = me * w_shard
+            gw = off + jnp.arange(w_shard)
+            # the wire axis is padded to w_pad: zero the padding wires so
+            # their (noise-only) waveforms cannot fire hits
+            masked = jnp.where((gw < cfg.num_wires)[:, None],
+                               decon_local, 0.0)
+            return find_hits(masked, cfg, cfg.hitfind_strategy,
+                             wire_offset=off, max_hits=cap_shard)
+
+        def dist_hit_find(state: SimState) -> SimState:
+            if not multi:
+                h = _hits_one(state.decon)
+                # n_hits -> (1,) so every HitSet leaf concatenates over the
+                # shard axis under one out_spec; the wrapper sums it back
+                return state._replace(hits=h._replace(n_hits=h.n_hits[None]))
+            per = [_hits_one(state.decon[i]) for i in range(len(specs))]
+            h = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+            return state._replace(hits=h._replace(n_hits=h.n_hits[:, None]))
+
+        overrides["deconvolve"] = dist_deconvolve
+        overrides["hit_find"] = dist_hit_find
+
     graph = build_sim_graph(cfg, resp, add_noise=add_noise,
-                            overrides=overrides)
+                            overrides=overrides, recon=recon)
+    grid_spec = P(None, axes, None) if multi else P(axes, None)
 
     def local_run(key, depos):
-        return graph.run(key, depos).adc
+        out = graph.run(key, depos)
+        if not recon:
+            return out.adc
+        return out.adc, out.decon, out.hits
 
     fn = shard_map(
         local_run, mesh=mesh,
         # the depo spec is a pytree prefix: every leaf of the depos arg
         # (DepoSet or PhysicalDepoSet) shards its depo axis over `axes`
         in_specs=(P(), P(axes)),
-        out_specs=P(None, axes, None) if multi else P(axes, None),
+        # the HitSet spec is a prefix too: every hit leaf concatenates its
+        # leading (capacity / plane) axis over the shard group
+        out_specs=(grid_spec if not recon else
+                   (grid_spec, grid_spec,
+                    P(None, axes) if multi else P(axes))),
         check_rep=False,
     )
-    return jax.jit(fn)
+    if not recon:
+        return jax.jit(fn)
+
+    def run(key, depos):
+        adc, decon, hits = fn(key, depos)
+        # per-shard candidate counts -> one global count per plane
+        n = jnp.sum(hits.n_hits, axis=-1).astype(jnp.int32)
+        return adc, decon, hits._replace(n_hits=n)
+
+    return jax.jit(run)
 
 
 def _flat_index(axes, mesh):

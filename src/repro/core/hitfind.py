@@ -1,0 +1,227 @@
+"""Threshold-scan hit finding over deconvolved wires -> fixed-capacity HitSet.
+
+The recon follow-ups to the source paper (arXiv:2107.00812 "Optimizing the
+Hit Finding Algorithm...") make this the workload after deconvolution: walk
+each wire's deconvolved waveform, and turn every run of consecutive
+above-threshold ticks into one *hit* — summed charge, charge-weighted mean
+tick, peak sample. The algorithm is sequential in time per wire but
+embarrassingly parallel over wires, which is exactly the portability
+trade-off the registry exists to measure:
+
+  scan   : one ``lax.fori_loop`` run-scanner per wire, ``vmap``-ed over the
+           wire axis — XLA vectorizes the per-tick step across wires.
+  pallas : the same scanner as a Pallas kernel, one grid step per wire
+           (``repro.kernels.hitfind``) — both call the SAME ``_wire_scan``
+           body, so their outputs are bit-identical by construction.
+
+Output contract (``HitSet``): a fixed-capacity (``cfg.max_hits``), mask-
+padded pytree, so jit/vmap/shard_map see static shapes whatever the event
+occupancy. Hits are compacted wire-major (ascending wire, then time);
+``n_hits`` counts every candidate run found — ``n_hits > mask.sum()`` means
+capacity truncation (per-wire ``max_hits_per_wire`` or global ``max_hits``),
+detectable instead of silent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LArTPCConfig
+from repro.tune.registry import register_strategy, set_default
+
+
+class HitSet(NamedTuple):
+    """Fixed-capacity, mask-padded hits of one readout plane.
+
+    Leaves are (max_hits,); multi-plane outputs stack a leading plane axis,
+    batched executors a leading event axis. Padding rows have mask False and
+    zeroed values.
+    """
+
+    wire: jax.Array    # int32 global wire index of the hit's wire
+    tick: jax.Array    # float32 charge-weighted mean tick of the run
+    charge: jax.Array  # float32 summed deconvolved charge (electrons)
+    peak: jax.Array    # float32 max deconvolved sample in the run
+    mask: jax.Array    # bool — True for real hits, False for padding
+    n_hits: jax.Array  # () int32 total candidate runs found; > mask.sum()
+    #                    signals capacity truncation
+
+
+# ---------------------------------------------------------------------------
+# The shared per-wire run scanner (both strategies execute this exact body)
+# ---------------------------------------------------------------------------
+
+
+def _emit(fire, n, csum, tsum, pk, hq, ht, hp, cap: int):
+    """Close a run: append (charge, mean tick, peak) at slot ``n`` if there
+    is room. ``n`` counts every fired run, stored or not, so truncation at
+    the per-wire capacity is visible to the caller."""
+    ok = fire & (n < cap)
+    idx = jnp.minimum(n, cap - 1)
+    hq = hq.at[idx].set(jnp.where(ok, csum, hq[idx]))
+    ht = ht.at[idx].set(jnp.where(ok, tsum / jnp.maximum(csum, 1e-30),
+                                  ht[idx]))
+    hp = hp.at[idx].set(jnp.where(ok, pk, hp[idx]))
+    return n + fire.astype(jnp.int32), hq, ht, hp
+
+
+def _wire_scan(vals: jax.Array, threshold, cap: int):
+    """Scan one wire's (T,) waveform for runs of samples > threshold.
+
+    Returns (count, charge, tick, peak): count is the TOTAL number of runs
+    found (may exceed ``cap``); the (cap,) arrays hold the first ``cap``
+    runs in time order. Pure jnp + ``fori_loop``, so it runs identically
+    under vmap (the XLA strategy) and inside a Pallas kernel body.
+    """
+    t_len = vals.shape[0]
+
+    def step(t, carry):
+        n, active, csum, tsum, pk, hq, ht, hp = carry
+        v = vals[t]
+        above = v > threshold
+        # a run ends when the previous tick was in-run and this one is not
+        n, hq, ht, hp = _emit(active & ~above, n, csum, tsum, pk,
+                              hq, ht, hp, cap)
+        tf = t.astype(jnp.float32)
+        csum = jnp.where(above, jnp.where(active, csum + v, v), 0.0)
+        tsum = jnp.where(above, jnp.where(active, tsum + v * tf, v * tf), 0.0)
+        pk = jnp.where(above, jnp.where(active, jnp.maximum(pk, v), v), 0.0)
+        return n, above, csum, tsum, pk, hq, ht, hp
+
+    zeros = jnp.zeros((cap,), jnp.float32)
+    f0 = jnp.float32(0.0)
+    carry = (jnp.int32(0), jnp.asarray(False), f0, f0, f0,
+             zeros, zeros, zeros)
+    n, active, csum, tsum, pk, hq, ht, hp = jax.lax.fori_loop(
+        0, t_len, step, carry)
+    # flush a run still open at the readout edge
+    n, hq, ht, hp = _emit(active, n, csum, tsum, pk, hq, ht, hp, cap)
+    return n, hq, ht, hp
+
+
+# ---------------------------------------------------------------------------
+# Strategies — the registry's ``hit_find`` op
+# ---------------------------------------------------------------------------
+#
+# A strategy maps (decon (W, T), cfg) -> per-wire candidates:
+#   counts (W,) int32, charge/tick/peak (W, max_hits_per_wire) float32
+# ``find_hits`` compacts them into the global HitSet.
+
+
+@register_strategy("hit_find", "scan",
+                   note="per-wire fori_loop run scanner, vmap over wires")
+def hit_find_scan(decon: jax.Array, cfg: LArTPCConfig):
+    thr = jnp.float32(cfg.hit_threshold)
+    cap = int(cfg.max_hits_per_wire)
+    return jax.vmap(lambda row: _wire_scan(row, thr, cap))(decon)
+
+
+def _pallas_viable(ctx) -> bool:
+    # compiled on TPU; elsewhere the Pallas interpreter walks the wire grid
+    # in Python, so cap it to smoke-scale grids (same bound as fused_pallas)
+    if ctx.backend == "tpu":
+        return True
+    cells = ctx.shape.get("num_wires", 0) * ctx.shape.get("num_ticks", 0)
+    return cells <= (1 << 21)
+
+
+@register_strategy("hit_find", "pallas", available=_pallas_viable,
+                   note="one Pallas grid step per wire (same scan body)")
+def hit_find_pallas(decon: jax.Array, cfg: LArTPCConfig):
+    from repro.kernels.hitfind.ops import find_wire_hits_pallas
+
+    return find_wire_hits_pallas(decon, threshold=float(cfg.hit_threshold),
+                                 cap=int(cfg.max_hits_per_wire))
+
+
+set_default("hit_find", "scan")
+
+
+# ---------------------------------------------------------------------------
+# Compaction + dispatch
+# ---------------------------------------------------------------------------
+
+
+def compact_hits(counts: jax.Array, charge: jax.Array, tick: jax.Array,
+                 peak: jax.Array, cfg: LArTPCConfig, *,
+                 wire_offset=0, max_hits: Optional[int] = None) -> HitSet:
+    """Flatten per-wire candidate arrays into one wire-major HitSet.
+
+    Stored hits keep (wire, time) order; candidates past the global
+    ``max_hits`` capacity fall into a dump slot that is dropped. ``n_hits``
+    sums the *found* counts, so truncation (per-wire or global) shows as
+    ``n_hits > mask.sum()``. ``wire_offset`` shifts the reported wire index
+    (the distributed executor passes its shard's first global wire).
+    """
+    w, cap = charge.shape
+    m = int(max_hits if max_hits is not None else cfg.max_hits)
+    stored = jnp.minimum(counts, cap)                    # (W,)
+    starts = jnp.cumsum(stored) - stored                 # exclusive prefix
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = j < stored[:, None]                          # (W, cap)
+    # invalid and overflow candidates both target the dump slot m
+    tgt = jnp.where(valid, jnp.minimum(starts[:, None] + j, m), m).reshape(-1)
+    wires = jnp.broadcast_to(
+        (jnp.arange(w, dtype=jnp.int32) + wire_offset)[:, None], (w, cap))
+
+    def place(vals, dtype):
+        out = jnp.zeros((m + 1,), dtype)
+        return out.at[tgt].set(vals.reshape(-1).astype(dtype))[:m]
+
+    nstored = jnp.zeros((m + 1,), jnp.int32).at[tgt].add(
+        valid.reshape(-1).astype(jnp.int32))[:m]
+    return HitSet(
+        wire=place(wires, jnp.int32),
+        tick=place(tick, jnp.float32),
+        charge=place(charge, jnp.float32),
+        peak=place(peak, jnp.float32),
+        mask=nstored > 0,
+        n_hits=jnp.sum(counts).astype(jnp.int32),
+    )
+
+
+def find_hits(decon: jax.Array, cfg: LArTPCConfig,
+              strategy: Optional[str] = None, *, wire_offset=0,
+              max_hits: Optional[int] = None) -> HitSet:
+    """Threshold-scan one plane's deconvolved (W, T) grid into a HitSet.
+
+    ``strategy`` may be None (registry default), ``"auto"`` (tuning cache /
+    default, keyed by the grid shape and per-wire capacity), or a registered
+    candidate name; unknown names fail here with the valid list.
+    ``wire_offset``/``max_hits`` override the global wire numbering and the
+    HitSet capacity (the distributed executor scans per-shard slices).
+    """
+    from repro.tune import autotune, registry
+
+    if strategy is None:
+        strategy = registry.default_strategy("hit_find")
+    elif strategy == "auto":
+        shape = {"num_wires": decon.shape[0], "num_ticks": decon.shape[1],
+                 "max_hits_per_wire": cfg.max_hits_per_wire}
+        strategy = autotune.resolve("hit_find", None, shape=shape).strategy
+    try:
+        strat = registry.get_strategy("hit_find", strategy)
+    except KeyError:
+        valid = sorted(registry.strategies("hit_find")) + ["auto"]
+        raise ValueError(
+            f"unknown hit_find strategy {strategy!r}; valid: {valid}"
+        ) from None
+    counts, charge, tick, peak = strat.fn(decon, cfg)
+    return compact_hits(counts, charge, tick, peak, cfg,
+                        wire_offset=wire_offset, max_hits=max_hits)
+
+
+def hits_to_tuples(hits: HitSet) -> Tuple[Tuple[int, float, float], ...]:
+    """Host-side view of the real hits as sorted (wire, tick, charge)
+    tuples — the executor-equivalence tests compare hit SETS this way
+    (compaction *positions* differ between the single-device and sharded
+    layouts; the hits themselves must not)."""
+    import numpy as np
+
+    mask = np.asarray(hits.mask)
+    rows = zip(np.asarray(hits.wire)[mask].tolist(),
+               np.asarray(hits.tick)[mask].tolist(),
+               np.asarray(hits.charge)[mask].tolist())
+    return tuple(sorted(rows))

@@ -139,7 +139,7 @@ set_default("charge_grid", "unfused")
 def simulate_fig4(key: jax.Array, depos, resp=None,
                   cfg: Optional[LArTPCConfig] = None,
                   pool: Optional[jax.Array] = None,
-                  add_noise: bool = True) -> SimOutput:
+                  add_noise: bool = True, recon: bool = False) -> SimOutput:
     """The batched device-resident pipeline (paper Fig. 4). jit-able end to end.
 
     One ``SimGraph.run`` of the canonical stage chain; ``depos`` may be a
@@ -147,11 +147,14 @@ def simulate_fig4(key: jax.Array, depos, resp=None,
     stage transports the latter). ``resp`` is a single ``DetectorResponse``
     (single-plane), a per-plane sequence (multi-plane), or None for the
     config defaults; multi-plane outputs carry a leading plane axis.
+    ``recon=True`` appends the deconvolve/hit_find stages and populates
+    ``SimOutput.decon``/``hits``.
     """
     if cfg is None:
         # cfg defaults to None only so resp can be omitted positionally
         raise TypeError("simulate_fig4() missing required argument: 'cfg'")
-    graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise)
+    graph = build_sim_graph(cfg, resp, pool=pool, add_noise=add_noise,
+                            recon=recon)
     return graph.run(key, depos)
 
 
@@ -205,9 +208,13 @@ def simulate_fig3(key: jax.Array, depos: DepoSet, resp: DetectorResponse,
 
 
 def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
-                add_noise: bool = True, donate: bool = False):
+                add_noise: bool = True, donate: bool = False,
+                recon: bool = False):
     """Return a jit'd simulate(key, depos) closure (the production path):
     the single-event executor of the canonical ``SimGraph``.
+
+    ``recon=True`` runs the full sim -> recon chain (deconvolve + hit_find
+    appended; see ``build_sim_graph``).
 
     Any ``"auto"`` strategy fields resolve (tuning cache / backend default)
     here, before jit, so the traced program is fixed.
@@ -224,7 +231,7 @@ def make_sim_fn(cfg: LArTPCConfig, resp: Optional[DetectorResponse] = None,
     cfg = resolve_config(cfg)
     # build_sim_graph supplies the standard RNG pool when cfg asks for it,
     # and the per-plane default responses when resp is None
-    graph = build_sim_graph(cfg, resp, add_noise=add_noise)
+    graph = build_sim_graph(cfg, resp, add_noise=add_noise, recon=recon)
     return jax.jit(graph.run, donate_argnums=(0, 1) if donate else ())
 
 

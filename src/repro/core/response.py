@@ -17,6 +17,16 @@ from repro.config import LArTPCConfig
 
 
 class DetectorResponse(NamedTuple):
+    """A frequency-domain transfer function over the padded readout grid.
+
+    The FORWARD response (``make_response``) is the canonical instance, but
+    the container is direction-agnostic: the recon chain's inverse filters
+    (``repro.core.deconvolve.make_deconv_filter``) are DetectorResponses
+    too — same ``pad_shape``/``plane``, ``freq`` holding the regularized
+    inverse — so every ``fft_convolve`` layout and the plane-keyed tuning
+    bucket apply to deconvolution unchanged.
+    """
+
     kernel: jax.Array       # (response_wires, response_ticks) real-space response
     freq: jax.Array         # rfft2 of the kernel at padded grid shape (complex64)
     pad_shape: tuple        # (W_pad, T_pad) padded grid shape for linear conv

@@ -47,18 +47,28 @@ from repro.core.fft_conv import digitize, fft_convolve
 from repro.core.noise import simulate_noise
 from repro.core.response import DetectorResponse
 
-#: canonical stage order of the full simulation chain
+#: canonical stage order of the simulation chain
 STAGE_ORDER = ("drift", "charge_grid", "convolve", "noise", "digitize")
+#: the recon stages ``build_sim_graph(..., recon=True)`` appends
+RECON_STAGE_ORDER = ("deconvolve", "hit_find")
+#: the full sim -> recon chain
+FULL_STAGE_ORDER = STAGE_ORDER + RECON_STAGE_ORDER
 
 
 class SimOutput(NamedTuple):
     """Simulation result. Single-plane configs (``num_planes == 1``) keep
     the seed 2-D layout; multi-plane configs carry a leading plane axis on
-    every leaf: adc (P, num_wires, num_ticks), etc."""
+    every leaf: adc (P, num_wires, num_ticks), etc.
+
+    ``decon``/``hits`` are populated only by recon graphs
+    (``build_sim_graph(..., recon=True)``) and stay None — an empty pytree
+    node, invisible to jit/vmap — on the default sim-only graph."""
 
     adc: jax.Array        # (num_wires, num_ticks) int16
     signal: jax.Array     # (num_wires, num_ticks) float32 pre-digitization
     charge_grid: jax.Array  # S(t,x) after scatter-add
+    decon: Optional[jax.Array] = None  # deconvolved charge estimate Ŝ(t,x)
+    hits: Optional[Any] = None         # HitSet (repro.core.hitfind)
 
 
 class SimState(NamedTuple):
@@ -76,6 +86,8 @@ class SimState(NamedTuple):
     grid: Optional[jax.Array] = None   # S(t,x) after charge_grid
     signal: Optional[jax.Array] = None  # M(t,x) after convolve (+ noise)
     adc: Optional[jax.Array] = None    # int16 after digitize
+    decon: Optional[jax.Array] = None  # Ŝ(t,x) after deconvolve (recon)
+    hits: Optional[Any] = None         # HitSet after hit_find (recon)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +147,8 @@ class SimGraph:
 
     def output(self, state: SimState) -> SimOutput:
         return SimOutput(adc=state.adc, signal=state.signal,
-                         charge_grid=state.grid)
+                         charge_grid=state.grid, decon=state.decon,
+                         hits=state.hits)
 
     def run_state(self, state: SimState) -> SimState:
         for stage in self.stages:
@@ -362,15 +375,70 @@ def digitize_stage(cfg: LArTPCConfig) -> Stage:
     return Stage("digitize", fn)
 
 
+def deconvolve_stage(cfg: LArTPCConfig, resp=None,
+                     planes: Optional[Tuple[int, ...]] = None) -> Stage:
+    """ADC -> Ŝ(t,x): invert the response with the config's regularized
+    filter, dispatched through the ``deconvolve`` strategy registry.
+
+    The per-plane inverse filters are precomputed here from the SAME
+    responses the convolve stage applied (bipolar induction planes get the
+    bipolar inverse, unipolar collection the unipolar one)."""
+    from repro.core.deconvolve import (deconvolve, make_deconv_filter,
+                                       measured_signal)
+
+    multi = cfg.num_planes > 1
+    filts = tuple(make_deconv_filter(r, cfg)
+                  for r in _as_plane_responses(cfg, resp, planes))
+
+    def fn(state: SimState) -> SimState:
+        meas = measured_signal(state.adc, cfg)
+        if not multi:
+            return state._replace(
+                decon=deconvolve(meas, filts[0], cfg.deconv_strategy))
+        decon = jnp.stack([
+            deconvolve(meas[i], f, cfg.deconv_strategy)
+            for i, f in enumerate(filts)])
+        return state._replace(decon=decon)
+
+    return Stage("deconvolve", fn, op="deconvolve")
+
+
+def hit_find_stage(cfg: LArTPCConfig,
+                   planes: Optional[Tuple[int, ...]] = None) -> Stage:
+    """Ŝ(t,x) -> HitSet: threshold-scan runs on every deconvolved wire,
+    dispatched through the ``hit_find`` strategy registry. Multi-plane:
+    one scan per plane, HitSet leaves stacked to (P, max_hits)."""
+    from repro.core.hitfind import find_hits
+
+    specs = _selected_specs(cfg, planes)
+    multi = cfg.num_planes > 1
+
+    def fn(state: SimState) -> SimState:
+        if not multi:
+            return state._replace(
+                hits=find_hits(state.decon, cfg, cfg.hitfind_strategy))
+        per_plane = [find_hits(state.decon[i], cfg, cfg.hitfind_strategy)
+                     for i in range(len(specs))]
+        hits = jax.tree.map(lambda *xs: jnp.stack(xs), *per_plane)
+        return state._replace(hits=hits)
+
+    return Stage("hit_find", fn, op="hit_find")
+
+
 def build_sim_graph(cfg: LArTPCConfig, resp=None,
                     pool: Optional[jax.Array] = None, add_noise: bool = True,
                     overrides: Optional[Dict[str, Callable | Stage]] = None,
                     planes: Optional[Tuple[int, ...]] = None,
-                    ) -> SimGraph:
+                    recon: bool = False) -> SimGraph:
     """Assemble the canonical ``drift -> charge_grid -> convolve -> noise ->
     digitize`` chain. This is the ONLY place the stage order is written down;
     every executor (single / batched / distributed / streaming) runs the
     graph this returns.
+
+    ``recon=True`` appends the reconstruction stages ``deconvolve ->
+    hit_find`` after digitize (closing the sim -> recon loop); the default
+    graph stays bit-identical to the sim-only chain — no recon stage, no
+    ``decon``/``hits`` output leaves.
 
     ``resp`` is the detector response: a single ``DetectorResponse`` for
     single-plane configs, a per-plane sequence for multi-plane configs, or
@@ -404,6 +472,9 @@ def build_sim_graph(cfg: LArTPCConfig, resp=None,
     if add_noise:
         stages.append(noise_stage(cfg, planes=planes))
     stages.append(digitize_stage(cfg))
+    if recon:
+        stages.append(deconvolve_stage(cfg, resp, planes=planes))
+        stages.append(hit_find_stage(cfg, planes=planes))
     graph = SimGraph(stages=tuple(stages))
     if overrides:
         graph = graph.replace(**overrides)

@@ -1,0 +1,67 @@
+"""Pallas kernel: per-wire threshold-run hit scanner.
+
+One grid step per wire: the step DMAs that wire's (1, T) waveform block into
+VMEM, runs the SAME ``_wire_scan`` body the XLA strategy vmaps (a
+``fori_loop`` over ticks — sequential in time, parallel over wires, the
+natural decomposition the hit-finding paper (arXiv:2107.00812) settles on),
+and writes the wire's (1, cap) candidate rows plus its (1, 1) run count.
+
+The candidate arrays ride the loop carry in registers/VMEM and store once at
+the end — no scatter into the output ref from inside the loop. The threshold
+and per-wire capacity are baked in as Python statics (they come from the
+config, which is static under jit anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hitfind import _wire_scan
+
+
+def _hitfind_kernel(q_ref, counts_ref, hq_ref, ht_ref, hp_ref, *,
+                    threshold: float, cap: int):
+    """Grid step w: scan wire w's waveform block for above-threshold runs.
+
+    q_ref: (1, T) VMEM block of the deconvolved grid's wire w.
+    counts_ref: (1, 1) int32; hq/ht/hp_ref: (1, cap) float32 outputs.
+    """
+    vals = q_ref[0, :].astype(jnp.float32)
+    n, hq, ht, hp = _wire_scan(vals, jnp.float32(threshold), cap)
+    counts_ref[0, 0] = n
+    hq_ref[0, :] = hq
+    ht_ref[0, :] = ht
+    hp_ref[0, :] = hp
+
+
+def hitfind_pallas(decon: jax.Array, *, threshold: float, cap: int,
+                   interpret: bool = True):
+    """Run the per-wire scanner over a (W, T) deconvolved grid.
+
+    Returns (counts (W, 1) int32, charge (W, cap), tick (W, cap),
+    peak (W, cap)) — the per-wire candidate layout ``compact_hits`` takes
+    (the caller squeezes counts).
+    """
+    w, t_len = decon.shape
+    kernel = functools.partial(_hitfind_kernel, threshold=threshold, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(w,),
+        in_specs=[pl.BlockSpec((1, t_len), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((w, 1), jnp.int32),
+            jax.ShapeDtypeStruct((w, cap), jnp.float32),
+            jax.ShapeDtypeStruct((w, cap), jnp.float32),
+            jax.ShapeDtypeStruct((w, cap), jnp.float32),
+        ),
+        interpret=interpret,
+    )(decon)

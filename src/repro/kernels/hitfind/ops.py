@@ -1,0 +1,22 @@
+"""jit'd wrapper for the per-wire Pallas hit scanner."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.hitfind.kernel import hitfind_pallas
+
+
+def find_wire_hits_pallas(decon: jax.Array, *, threshold: float, cap: int,
+                          interpret: bool | None = None):
+    """(W, T) deconvolved grid -> per-wire candidates, kernel-scanned.
+
+    Returns (counts (W,) int32, charge/tick/peak (W, cap) float32) — the
+    same layout (and, by shared scan body, the same bits) as the XLA
+    ``scan`` strategy.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    counts, hq, ht, hp = hitfind_pallas(decon, threshold=threshold, cap=cap,
+                                        interpret=interpret)
+    return counts[:, 0], hq, ht, hp

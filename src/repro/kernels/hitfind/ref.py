@@ -1,0 +1,14 @@
+"""Reference implementation the kernel is checked against: the shared
+``_wire_scan`` body vmapped over wires (identical to the registry's XLA
+``scan`` strategy — the kernel must be bit-equal to this)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hitfind import _wire_scan
+
+
+def find_wire_hits_ref(decon: jax.Array, *, threshold: float, cap: int):
+    thr = jnp.float32(threshold)
+    return jax.vmap(lambda row: _wire_scan(row, thr, cap))(decon)

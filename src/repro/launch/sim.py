@@ -3,7 +3,7 @@
     python -m repro.launch.sim [--smoke] [--events N] [--batch-events E]
                                [--pipeline fig3|fig4] [--tune] [--retune]
                                [--strategy <scatter>] [--stage-board]
-                               [--set key=value ...]
+                               [--recon] [--set key=value ...]
 
 ``--tune`` autotunes every registered hot op (drift, scatter-add,
 charge-grid, FFT-convolve) on the live backend at this config's shape before
@@ -11,6 +11,8 @@ running, caching winners to disk; a repeated run reports cache hits instead
 of re-measuring (see docs/tuning.md). ``--strategy`` forces the scatter-add
 strategy, overriding both the config and the tuner. ``--stage-board`` prints
 per-stage device timings (the papers' stage-cost table) before streaming.
+``--recon`` closes the sim->recon loop: the streamed graph also deconvolves
+the ADC and finds hits, and each batch reports its hit counts.
 
 The fig4 path streams *batches* of events through one vmap'd device program
 (``repro.core.batch``): while batch b computes on device, the host generates
@@ -40,7 +42,8 @@ from repro.core.response import make_response
 def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
                     seed: int = 0, sim: Optional[Callable] = None,
                     pad_to: Optional[int] = None,
-                    on_batch: Optional[Callable] = None) -> dict:
+                    on_batch: Optional[Callable] = None,
+                    recon: bool = False) -> dict:
     """Double-buffered streaming driver for the batched engine — the
     streaming executor of the canonical ``SimGraph`` (its device program is
     ``make_batched_sim_fn``'s jit'd vmap over ``SimGraph.run``).
@@ -62,7 +65,8 @@ def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
     # footprint by one (E, N_max) batch + keys). CPU never implements
     # donation — skip it there to avoid a pointless warning per compile.
     if sim is None:
-        sim = make_batched_sim_fn(cfg, donate=jax.default_backend() != "cpu")
+        sim = make_batched_sim_fn(cfg, donate=jax.default_backend() != "cpu",
+                                  recon=recon)
     key = jax.random.key(seed)
     num_batches = -(-num_events // batch_events)
     # fixed depo padding across batches -> a single compiled program
@@ -153,7 +157,11 @@ def main():
     ap.add_argument("--stage-board", action="store_true",
                     help="print per-stage device timings for this config "
                          "before streaming (drift/charge_grid/convolve/"
-                         "noise/digitize)")
+                         "noise/digitize, plus deconvolve/hit_find "
+                         "with --recon)")
+    ap.add_argument("--recon", action="store_true",
+                    help="append the deconvolve + hit_find recon stages "
+                         "and report per-batch hit counts (fig4 only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--set", nargs="*", default=[])
     args = ap.parse_args()
@@ -189,7 +197,7 @@ def main():
         from repro.tune import resolve_config
 
         rcfg = resolve_config(cfg)
-        graph = build_sim_graph(rcfg)
+        graph = build_sim_graph(rcfg, recon=args.recon)
         key = jax.random.key(args.seed)
         pdepos = generate_physical_depos(key, rcfg)
         _, timings = graph.timed(key, pdepos)
@@ -201,24 +209,35 @@ def main():
             # per-plane rows — the papers' per-plane cost tables: the same
             # graph restricted to one plane at a time
             for p in range(rcfg.num_planes):
-                _, pt = build_sim_graph(rcfg, planes=(p,)).timed(key, pdepos)
+                _, pt = build_sim_graph(rcfg, planes=(p,),
+                                        recon=args.recon).timed(key, pdepos)
                 for name, sec in pt.items():
                     print(f"stage plane{p}/{name:<10} {sec * 1e3:8.2f} ms "
                           f"({100 * sec / total:5.1f}%)")
 
     if cfg.pipeline == "fig3":
+        if args.recon:
+            raise SystemExit("--recon needs the batched fig4 pipeline "
+                             "(drop --pipeline fig3)")
         _run_fig3(cfg, args.events, args.seed)
         return
 
     def report(b, n_valid, n_depos, dt, out):
         adc = np.asarray(out.adc[:n_valid])
-        print(f"batch {b}: {n_valid} events / {n_depos} depos -> "
-              f"{out.adc.shape} ADC in {dt*1e3:.0f} ms "
-              f"({n_depos/dt:.3g} depos/s), "
-              f"max dev {np.abs(adc - cfg.adc_baseline).max()}")
+        line = (f"batch {b}: {n_valid} events / {n_depos} depos -> "
+                f"{out.adc.shape} ADC in {dt*1e3:.0f} ms "
+                f"({n_depos/dt:.3g} depos/s), "
+                f"max dev {np.abs(adc - cfg.adc_baseline).max()}")
+        if args.recon:
+            stored = int(np.asarray(out.hits.mask[:n_valid]).sum())
+            found = int(np.asarray(out.hits.n_hits[:n_valid]).sum())
+            line += (f", {stored} hits"
+                     + (f" ({found} found)" if found != stored else ""))
+        print(line)
 
     stats = stream_simulate(cfg, args.events, args.batch_events,
-                            seed=args.seed, on_batch=report)
+                            seed=args.seed, on_batch=report,
+                            recon=args.recon)
     ev_s = stats["events"] / stats["wall_s"]
     dp_s = stats["depos"] / stats["wall_s"]
     print(f"total: {stats['events']} events / {stats['depos']} depos in "

@@ -43,7 +43,15 @@ OP_FIELDS: Dict[str, str] = {
     "scatter_add": "scatter_strategy",
     "charge_grid": "charge_grid_strategy",
     "fft_convolve": "fft_strategy",
+    "deconvolve": "deconv_strategy",
+    "hit_find": "hitfind_strategy",
 }
+
+#: ops whose tuning decision is keyed by the plane KIND (their transforms
+#: differ between bipolar induction and unipolar collection planes) — on
+#: multi-plane "auto" configs the field stays "auto" and every dispatch
+#: resolves with its own plane key (see resolve_config_with_decisions)
+PLANE_KEYED_OPS = ("fft_convolve", "deconvolve")
 
 
 # ---------------------------------------------------------------------------
@@ -129,7 +137,7 @@ def op_shape(op: str, cfg) -> Dict[str, int]:
             "patch_wires": cfg.patch_wires,
             "patch_ticks": cfg.patch_ticks,
         }
-    if op == "fft_convolve":
+    if op in ("fft_convolve", "deconvolve"):
         from repro.config import plane_specs
 
         return {
@@ -139,13 +147,19 @@ def op_shape(op: str, cfg) -> Dict[str, int]:
             "response_ticks": cfg.response_ticks,
             # the response TYPE is part of the problem: a decision timed
             # against the bipolar induction transform must not key
-            # collection-plane dispatches. This default is the first
-            # plane's kind (the readout plane of a single-plane config);
-            # multi-plane "auto" configs never bake one answer into the
-            # field — resolve_config leaves "auto" so every convolve
-            # dispatch resolves with plane=resp.plane, and tuning runs
-            # once per distinct kind (``_resolve_fft_per_plane``)
+            # collection-plane dispatches (and likewise for the inverse
+            # filters). This default is the first plane's kind (the readout
+            # plane of a single-plane config); multi-plane "auto" configs
+            # never bake one answer into the field — resolve_config leaves
+            # "auto" so every dispatch resolves with plane=resp.plane, and
+            # tuning runs once per distinct kind (``_resolve_per_plane``)
             "plane": plane_specs(cfg)[0].kind,
+        }
+    if op == "hit_find":
+        return {
+            "num_wires": cfg.num_wires,
+            "num_ticks": cfg.num_ticks,
+            "max_hits_per_wire": cfg.max_hits_per_wire,
         }
     raise KeyError(f"no shape extractor for op {op!r}")
 
@@ -252,11 +266,48 @@ def _fft_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
     return {name: make(s) for name, s in avail.items()}
 
 
+def _deconv_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
+    from repro.core.deconvolve import make_deconv_filter
+    from repro.core.response import make_response
+
+    del sample_depos
+    # like _fft_problem: the inverse filter of the plane kind the decision
+    # is keyed to, applied to a measured-signal-sized grid
+    resp = make_response(cfg, plane=ctx.shape.get("plane", "induction"))
+    filt = make_deconv_filter(resp, cfg)
+    shape = (cfg.num_wires, cfg.num_ticks)
+    meas = jax.random.normal(jax.random.key(3), shape)
+
+    def make(strat):
+        f = jax.jit(lambda m: strat.fn(m, filt))
+        return lambda: f(meas)
+
+    avail = registry.available_strategies("deconvolve", ctx)
+    return {name: make(s) for name, s in avail.items()}
+
+
+def _hitfind_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
+    del sample_depos
+    # noise-scale deconvolved grid: candidate runs appear at a realistic
+    # (sparse) rate relative to the threshold
+    shape = (cfg.num_wires, cfg.num_ticks)
+    decon = jax.random.normal(jax.random.key(4), shape) * cfg.hit_threshold
+
+    def make(strat):
+        f = jax.jit(lambda d: strat.fn(d, cfg))
+        return lambda: f(decon)
+
+    avail = registry.available_strategies("hit_find", ctx)
+    return {name: make(s) for name, s in avail.items()}
+
+
 _PROBLEMS = {
     "drift": _drift_problem,
     "scatter_add": _scatter_problem,
     "charge_grid": _charge_grid_problem,
     "fft_convolve": _fft_problem,
+    "deconvolve": _deconv_problem,
+    "hit_find": _hitfind_problem,
 }
 
 TUNABLE_OPS = tuple(_PROBLEMS)
@@ -476,18 +527,19 @@ def resolve_config_with_decisions(
         if tune and tune_explicit and getattr(cfg, fld) != "auto":
             cfg = dataclasses.replace(cfg, **{fld: "auto"})
         if (
-            op == "fft_convolve"
+            op in PLANE_KEYED_OPS
             and getattr(cfg, "num_planes", 1) > 1
             and getattr(cfg, fld) == "auto"
         ):
             # Multi-plane: ONE config field cannot name a per-plane winner,
-            # so "auto" stays in the config and each convolve dispatch
-            # resolves from the cache with its own plane key at trace time
-            # (fft_convolve's auto path only reads cache/defaults — it
-            # never times). Tuning here measures every distinct plane kind
-            # so those per-plane cache entries exist before jit.
+            # so "auto" stays in the config and each dispatch resolves from
+            # the cache with its own plane key at trace time (the ops' auto
+            # paths only read cache/defaults — they never time). Tuning
+            # here measures every distinct plane kind so those per-plane
+            # cache entries exist before jit.
             decisions.extend(
-                _resolve_fft_per_plane(
+                _resolve_per_plane(
+                    op,
                     cfg,
                     tune=tune,
                     cache=cache,
@@ -512,7 +564,8 @@ def resolve_config_with_decisions(
     return cfg, decisions
 
 
-def _resolve_fft_per_plane(
+def _resolve_per_plane(
+    op: str,
     cfg,
     *,
     tune: bool,
@@ -521,16 +574,16 @@ def _resolve_fft_per_plane(
     force: bool,
     sample_depos: Optional[int],
 ):
-    """One fft_convolve decision per distinct plane kind of a multi-plane
-    config (the field itself stays "auto"; see the caller)."""
+    """One decision of a plane-keyed op per distinct plane kind of a
+    multi-plane config (the field itself stays "auto"; see the caller)."""
     from repro.config import plane_specs
 
     decisions = []
     for kind in sorted({s.kind for s in plane_specs(cfg)}):
-        shape = dict(op_shape("fft_convolve", cfg), plane=kind)
+        shape = dict(op_shape(op, cfg), plane=kind)
         if tune:
             d = tune_op(
-                "fft_convolve",
+                op,
                 cfg,
                 cache=cache,
                 timer=timer,
@@ -541,6 +594,6 @@ def _resolve_fft_per_plane(
         else:
             # cache/default lookup only — cfg=None skips the explicit-name
             # branch (the field is "auto" by construction here)
-            d = resolve("fft_convolve", None, cache=cache, shape=shape)
+            d = resolve(op, None, cache=cache, shape=shape)
         decisions.append(d)
     return decisions

@@ -96,8 +96,10 @@ def ensure_registered() -> None:
     if _ENSURED:
         return
     _ENSURED = True
+    import repro.core.deconvolve  # noqa: F401  registers deconvolve/*
     import repro.core.drift  # noqa: F401  registers drift/*
     import repro.core.fft_conv  # noqa: F401  registers fft_convolve/*
+    import repro.core.hitfind  # noqa: F401  registers hit_find/*
     import repro.core.pipeline  # noqa: F401  registers charge_grid/*
     import repro.core.scatter  # noqa: F401  registers scatter_add/*
 

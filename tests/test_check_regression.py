@@ -1,0 +1,116 @@
+"""The bench regression gate actually gates: no silent-pass configurations.
+
+Regression tests for ``benchmarks/check_regression.py`` — most importantly
+the silent failure modes where a ``--record`` selector matches nothing
+worth gating and every CI run sails through green:
+
+ * a glob matching zero records anywhere must fail;
+ * a glob matching only FRESH records must fail (each match renders as a
+   warn-only "(new)" row, so the committed family it was written to watch
+   is not being compared against anything);
+ * a plain record name found in neither file must fail (typo'd or removed
+   benchmark);
+ * a plain name present only in fresh keeps the documented warn-only
+   behavior — new benchmarks land before their baseline numbers do.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "benchmarks", "check_regression.py"))
+cr = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cr)
+
+
+def _bench(path, rows):
+    path.write_text(json.dumps(
+        {"records": [{"name": n, "us_per_call": us} for n, us in rows]}))
+    return str(path)
+
+
+@pytest.fixture
+def files(tmp_path):
+    base = _bench(tmp_path / "base.json",
+                  [("stages/a_total", 100.0), ("stages/b_total", 50.0),
+                   ("pipeline/fig4", 10.0)])
+    fresh = _bench(tmp_path / "fresh.json",
+                   [("stages/a_total", 120.0), ("stages/b_total", 55.0),
+                    ("pipeline/fig4", 11.0), ("stages/new_total", 5.0)])
+    return base, fresh
+
+
+class TestGatePasses:
+    def test_glob_within_ratio(self, files, capsys):
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/*_total"], 2.0) == 0
+        out = capsys.readouterr().out
+        assert "stages/a_total" in out and "stages/b_total" in out
+
+    def test_fresh_only_name_warns_not_fails(self, files, capsys):
+        """A plain name that exists only in fresh is a new benchmark:
+        reported as (new), exit 0."""
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/new_total"], 2.0) == 0
+        assert "(new)" in capsys.readouterr().out
+
+
+class TestGateFails:
+    def test_ratio_exceeded(self, files):
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/a_total"], 1.1) == 1
+
+    def test_record_missing_from_fresh(self, tmp_path):
+        base = _bench(tmp_path / "b.json", [("stages/gone", 10.0)])
+        fresh = _bench(tmp_path / "f.json", [("stages/other", 10.0)])
+        assert cr.check(base, fresh, ["stages/gone"], 2.0) == 1
+
+    def test_glob_matching_nothing_fails(self, files, capsys):
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/nope_*"], 2.0) == 1
+        assert "matched no records" in capsys.readouterr().err
+
+    def test_glob_matching_only_fresh_fails(self, files, capsys):
+        """THE silent case this gate used to have: a glob whose only matches
+        are fresh-run rows gates nothing (all rows render as warn-only
+        "(new)") — e.g. the committed baseline family was renamed away, or
+        the rows were never committed. Must fail loudly."""
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/new_*"], 2.0) == 1
+        err = capsys.readouterr().err
+        assert "BASELINE" in err
+
+    def test_plain_name_in_neither_file_fails(self, files, capsys):
+        """A watched name matching nothing anywhere is a typo or a removed
+        benchmark — previously printed '(new) nan' and passed."""
+        base, fresh = files
+        assert cr.check(base, fresh, ["stages/typo_total"], 2.0) == 1
+        assert "MISSING" in capsys.readouterr().out
+
+    def test_mixed_good_and_vanished_glob_still_fails(self, files):
+        """One healthy glob does not mask a dead one."""
+        base, fresh = files
+        assert cr.check(base, fresh,
+                        ["stages/a_total", "stages/nope_*"], 2.0) == 1
+
+
+class TestExpandRecords:
+    def test_glob_expands_against_union_preserving_order(self, files):
+        base, fresh = files
+        baseline = cr.load_records(base)
+        freshr = cr.load_records(fresh)
+        names = cr.expand_records(["pipeline/*", "stages/a_total"],
+                                  baseline, freshr)
+        assert names == ["pipeline/fig4", "stages/a_total"]
+
+    def test_duplicates_collapse(self, files):
+        base, fresh = files
+        baseline = cr.load_records(base)
+        freshr = cr.load_records(fresh)
+        names = cr.expand_records(["stages/a_total", "stages/a_*"],
+                                  baseline, freshr)
+        assert names.count("stages/a_total") == 1

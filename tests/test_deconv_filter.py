@@ -1,0 +1,187 @@
+"""Deconvolution filter properties: the inverse is bounded, real, and tuned.
+
+Deterministic property sweeps (no hypothesis dependency): the Wiener and
+Gaussian filters are checked against the spectral identities that make
+deconvolution safe — a regularized inverse must never blow up near response
+zeros (induction responses have a structural DC zero), must map real signals
+to real signals, and must slot into the same per-plane tuning bucket as the
+forward FFT convolve.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LArTPCConfig, plane_specs
+from repro.core.deconvolve import (DECONV_FILTERS, deconvolve,
+                                   make_deconv_filter,
+                                   make_plane_deconv_filters, measured_signal)
+from repro.core.response import DetectorResponse, make_response
+
+CFG = LArTPCConfig(num_wires=64, num_ticks=256, num_depos=48,
+                   response_wires=11, response_ticks=48)
+PLANES = ("induction", "collection")
+
+
+class TestWienerFilter:
+    @pytest.mark.parametrize("plane", PLANES)
+    def test_gain_is_bounded(self, plane):
+        """|G| <= 1 / (2 * sqrt(lam * max|R|^2)) everywhere — the 1/eps
+        blow-up near response zeros is structurally impossible."""
+        resp = make_response(CFG, plane=plane)
+        filt = make_deconv_filter(resp, CFG, kind="wiener")
+        lam = CFG.deconv_wiener_lambda
+        bound = 1.0 / (2.0 * np.sqrt(lam * float(
+            (jnp.abs(resp.freq) ** 2).max())))
+        gmax = float(jnp.abs(filt.freq).max())
+        assert gmax <= bound * 1.001, (gmax, bound)
+
+    @pytest.mark.parametrize("plane", PLANES)
+    def test_inverse_maps_real_to_real(self, plane):
+        """G inherits the Hermitian symmetry of R: applying it to a real
+        grid through the rfft2 path returns a (numerically) real grid, i.e.
+        forward-then-inverse of a random real signal stays real and finite."""
+        resp = make_response(CFG, plane=plane)
+        filt = make_deconv_filter(resp, CFG, kind="wiener")
+        rng = np.random.default_rng(0)
+        meas = jnp.asarray(rng.standard_normal(
+            (CFG.num_wires, CFG.num_ticks)).astype(np.float32)) * 100.0
+        out = deconvolve(meas, filt)
+        o = np.asarray(out)
+        assert o.dtype == np.float32
+        assert np.isfinite(o).all()
+
+    @pytest.mark.parametrize("plane", PLANES)
+    def test_attenuation_identity(self, plane):
+        """G * R == |R|^2 / (|R|^2 + lam * max|R|^2): the round-trip transfer
+        function is the attenuation factor — real, in [0, 1], and ~1 where
+        the response is strong."""
+        resp = make_response(CFG, plane=plane)
+        filt = make_deconv_filter(resp, CFG, kind="wiener")
+        lam = CFG.deconv_wiener_lambda
+        power = np.abs(np.asarray(resp.freq)) ** 2
+        got = np.asarray(filt.freq * resp.freq)
+        want = power / (power + lam * power.max())
+        np.testing.assert_allclose(got.imag, 0.0, atol=1e-5)
+        np.testing.assert_allclose(got.real, want, rtol=1e-4, atol=1e-6)
+        assert (want <= 1.0).all()
+        assert want.max() > 0.99
+
+    def test_lambda_trades_sharpness_for_gain(self):
+        """Smaller lambda -> larger peak gain (sharper inverse); the
+        regularization knob is monotone."""
+        resp = make_response(CFG)
+        gains = [float(jnp.abs(make_deconv_filter(
+            resp, CFG, wiener_lambda=lam).freq).max())
+            for lam in (1e-1, 1e-2, 1e-3)]
+        assert gains[0] < gains[1] < gains[2], gains
+
+
+class TestGaussianFilter:
+    def test_dc_gain_is_one(self):
+        """The time-frequency Gaussian window is exactly 1 at DC: total
+        charge on a wire passes the extra low-pass untouched."""
+        resp = make_response(CFG, plane="collection")
+        w = make_deconv_filter(resp, CFG, kind="wiener")
+        g = make_deconv_filter(resp, CFG, kind="gaussian")
+        ratio = np.asarray(g.freq[:, 0]) / np.asarray(w.freq[:, 0])
+        np.testing.assert_allclose(ratio, 1.0, rtol=1e-5)
+
+    def test_attenuates_high_frequencies(self):
+        """Away from DC the window monotonically suppresses the Wiener
+        gain, reaching the cut-frequency attenuation at Nyquist."""
+        resp = make_response(CFG)
+        w = make_deconv_filter(resp, CFG, kind="wiener")
+        g = make_deconv_filter(resp, CFG, kind="gaussian", gauss_cut=0.25)
+        ratio = np.abs(np.asarray(g.freq)) / np.maximum(
+            np.abs(np.asarray(w.freq)), 1e-30)
+        # the window depends only on the tick-frequency column
+        col = ratio.mean(axis=0)
+        assert (np.diff(col) < 1e-6).all()  # non-increasing
+        assert col[-1] < np.exp(-0.5 / 0.25 ** 2) * 1.05  # ~Nyquist cut
+
+    def test_unknown_kind_fails(self):
+        resp = make_response(CFG)
+        with pytest.raises(ValueError, match="deconv filter"):
+            make_deconv_filter(resp, CFG, kind="boxcar")
+        assert set(DECONV_FILTERS) == {"wiener", "gaussian"}
+
+
+class TestFilterAsResponse:
+    def test_filter_is_a_detector_response(self):
+        """The inverse filter reuses the DetectorResponse container (same
+        pad_shape/plane), so the forward FFT machinery applies unchanged."""
+        resp = make_response(CFG, plane="collection")
+        filt = make_deconv_filter(resp, CFG)
+        assert isinstance(filt, DetectorResponse)
+        assert filt.pad_shape == resp.pad_shape
+        assert filt.plane == resp.plane
+        assert filt.freq.dtype == jnp.complex64
+
+    def test_per_plane_filters_match_plane_kinds(self):
+        cfg = dataclasses.replace(CFG, num_planes=3)
+        from repro.core.response import make_plane_responses
+
+        resps = make_plane_responses(cfg)
+        filts = make_plane_deconv_filters(cfg)
+        assert len(filts) == 3
+        kinds = [s.kind for s in plane_specs(cfg)]
+        assert kinds == ["induction", "induction", "collection"]
+        # round-trip attenuation |G*R| at the tick-DC column: the bipolar
+        # (induction) response has no DC content to recover, the unipolar
+        # (collection) one passes DC nearly untouched
+        att = [float(np.abs(np.asarray(f.freq)[:, 0] *
+                            np.asarray(r.freq)[:, 0]).max())
+               for f, r in zip(filts, resps)]
+        assert att[0] < 0.2 and att[1] < 0.2, att
+        assert att[2] > 0.9, att
+
+    def test_measured_signal_inverts_digitize_scale(self):
+        adc = jnp.full((4, 8), CFG.adc_baseline + 1, jnp.int16)
+        meas = measured_signal(adc, CFG)
+        np.testing.assert_allclose(np.asarray(meas),
+                                   1.0 / CFG.adc_per_electron, rtol=1e-6)
+
+
+class TestTuningIntegration:
+    def test_both_ops_registered_with_strategies(self):
+        from repro.tune import registry
+
+        registry.ensure_registered()
+        assert set(registry.strategies("deconvolve")) == {"rfft2",
+                                                          "fft_reuse"}
+        assert set(registry.strategies("hit_find")) == {"scan", "pallas"}
+
+    def test_deconvolve_shares_plane_keyed_shape_bucket(self):
+        """deconvolve tunes per plane KIND exactly like fft_convolve: same
+        shape dict, plus the plane tag — an induction winner never leaks
+        onto the collection plane."""
+        from repro.tune.autotune import PLANE_KEYED_OPS, op_shape
+
+        cfg = dataclasses.replace(CFG, num_planes=3)
+        assert "deconvolve" in PLANE_KEYED_OPS
+        assert "fft_convolve" in PLANE_KEYED_OPS
+        for spec in plane_specs(cfg):
+            # the per-plane resolver keys each decision by the plane kind
+            # on top of the op's shape dims (same recipe both ops)
+            sd = dict(op_shape("deconvolve", cfg), plane=spec.kind)
+            sf = dict(op_shape("fft_convolve", cfg), plane=spec.kind)
+            assert sd == sf
+            assert sd["plane"] == spec.kind
+
+    def test_hit_find_shape_bucket(self):
+        from repro.tune.autotune import op_shape
+
+        s = op_shape("hit_find", CFG)
+        assert s == {"num_wires": CFG.num_wires, "num_ticks": CFG.num_ticks,
+                     "max_hits_per_wire": CFG.max_hits_per_wire}
+
+    def test_strategy_fields_resolve(self):
+        """'auto' in the config resolves both recon strategy fields through
+        the cache-or-default path without touching the tuner."""
+        from repro.tune.autotune import OP_FIELDS
+
+        assert OP_FIELDS["deconvolve"] == "deconv_strategy"
+        assert OP_FIELDS["hit_find"] == "hitfind_strategy"
