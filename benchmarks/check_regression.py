@@ -16,6 +16,11 @@ e.g. the per-plane stage rows ``'stages/fig4_smoke3p_plane*_total_fused'``
 matches fresh rows is gating nothing (the committed family vanished — or
 was never committed — and every run would silently pass as "(new)").
 
+The diff table ends with a per-``--record`` summary of how many rows each
+selector matched (``gated N record(s) — 'stages/…*': 12, …``), so a family
+glob that quietly shrank is visible in the CI log even when every surviving
+row passes.
+
 Exit status 1 (with a diff table) when fresh/baseline exceeds the ratio for
 any watched record; records missing from the fresh run also fail (a silently
 vanished benchmark is a regression too). A plain (non-glob) record name
@@ -39,18 +44,25 @@ def load_records(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in data["records"]}
 
 
-def expand_records(patterns: list, baseline: dict, fresh: dict) -> list:
+def expand_records(patterns: list, baseline: dict, fresh: dict,
+                   counts: dict | None = None) -> list:
     """Expand glob patterns against all known record names (plain names
     pass through so a fully missing record still reports as MISSING).
 
     Returns [] — which the caller treats as failure — when a glob matches
     no *baseline* record: fresh-only matches would render as warn-only
-    "(new)" rows, so such a glob gates nothing run after run."""
+    "(new)" rows, so such a glob gates nothing run after run.
+
+    When ``counts`` is given it is filled with {pattern: matched count} —
+    the gate summary prints it so a glob that quietly shrank from 12 rows
+    to 1 is visible in the CI log."""
     known = sorted(set(baseline) | set(fresh))
     names: list = []
     for pat in patterns:
         if any(c in pat for c in "*?["):
             hits = [n for n in known if fnmatch.fnmatch(n, pat)]
+            if counts is not None:
+                counts[pat] = len(hits)
             if not hits:
                 print(f"error: --record pattern {pat!r} matched no records",
                       file=sys.stderr)
@@ -62,8 +74,11 @@ def expand_records(patterns: list, baseline: dict, fresh: dict) -> list:
                       "pattern", file=sys.stderr)
                 return []
             names.extend(h for h in hits if h not in names)
-        elif pat not in names:
-            names.append(pat)
+        else:
+            if counts is not None:
+                counts[pat] = 1
+            if pat not in names:
+                names.append(pat)
     return names
 
 
@@ -71,7 +86,8 @@ def check(baseline_path: str, fresh_path: str, records: list,
           max_ratio: float) -> int:
     baseline = load_records(baseline_path)
     fresh = load_records(fresh_path)
-    records = expand_records(records, baseline, fresh)
+    counts: dict = {}
+    records = expand_records(records, baseline, fresh, counts=counts)
     if not records:
         return 1
     failed = False
@@ -97,6 +113,8 @@ def check(baseline_path: str, fresh_path: str, records: list,
         print(f"{name:<40} {baseline[name]:>12.1f} {fresh[name]:>12.1f} "
               f"{ratio:>6.2f}x  {verdict}")
         failed = failed or ratio > max_ratio
+    per_glob = ", ".join(f"{pat!r}: {n}" for pat, n in counts.items())
+    print(f"gated {len(records)} record(s) — {per_glob}")
     if failed:
         print(f"\nregression: ratio exceeded {max_ratio:.1f}x "
               f"(or a watched record vanished)", file=sys.stderr)

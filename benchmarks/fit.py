@@ -1,0 +1,77 @@
+"""Calibration-path timing board — the cost of differentiating the sim.
+
+The fit loop's unit of work is one jitted ``value_and_grad`` evaluation of
+the batched waveform loss (``repro.core.fit``); everything else (the Adam
+update) is a handful of host-side vector ops. This board pins three numbers
+on the smoke config so the CI gate catches the autodiff path regressing
+independently of the forward path:
+
+  fit/targets_build   : one-time cost — generate events, run the default
+                        int16 graph over the batch (jit included).
+  fit/loss_eval       : forward-only loss evaluation (differentiable graph:
+                        relaxed fluctuation + STE digitizer), post-jit.
+  fit/grad_eval       : ``jax.value_and_grad`` of the same loss, post-jit —
+                        the per-step cost of a fit; the ratio to
+                        ``loss_eval`` is the reverse-mode overhead.
+  fit/adam_step       : one full optimizer step through ``run_fit`` (grad
+                        eval + host Adam update), amortized over 20 steps.
+
+``python benchmarks/fit.py`` writes BENCH_fit.json; CI diffs it against the
+committed baseline via ``check_regression.py --record 'fit/*'``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+
+import jax
+
+from benchmarks.common import emit, time_fn, write_json
+from repro.config import get_config
+from repro.core.fit import (FitParam, FitSpec, make_fit_loss,
+                            make_fit_targets, run_fit)
+
+NUM_EVENTS = 2
+STEPS = 20
+
+
+def main() -> None:
+    cfg = get_config("lartpc-uboone", smoke=True)
+    spec = FitSpec(params=(
+        FitParam("electron_lifetime_us", init=150.0, lo=5.0, hi=500.0),
+        FitParam("recombination", init=0.5, lo=0.2, hi=1.0),
+    ))
+    # truth away from the init, like the --smoke fit
+    cfg = dataclasses.replace(cfg, electron_lifetime_us=60.0,
+                              recombination=0.75)
+
+    build = functools.partial(make_fit_targets, cfg, jax.random.key(0),
+                              num_events=NUM_EVENTS)
+    emit("fit/targets_build", time_fn(lambda: build().adc, warmup=1, iters=3),
+         f"events={NUM_EVENTS};n={cfg.num_depos}")
+    targets = build()
+
+    loss_fn = jax.jit(make_fit_loss(cfg, spec, targets))
+    vg = jax.jit(jax.value_and_grad(make_fit_loss(cfg, spec, targets)))
+    theta0 = spec.init_theta(cfg)
+    emit("fit/loss_eval", time_fn(loss_fn, theta0, iters=5),
+         f"events={NUM_EVENTS};params={spec.n}")
+    emit("fit/grad_eval", time_fn(lambda t: vg(t)[1], theta0, iters=5),
+         f"events={NUM_EVENTS};params={spec.n}")
+
+    def steps_of_fit():
+        return run_fit(make_fit_loss(cfg, spec, targets), spec, theta0,
+                       steps=STEPS, lr=0.2).loss
+
+    t = time_fn(steps_of_fit, warmup=1, iters=2)
+    emit("fit/adam_step", t / STEPS, f"steps={STEPS};amortized=1")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fit.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main()
+    print(f"wrote {write_json(args.out)}")

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines. Mapping to the paper:
   fft           -> §5 "FT" stage
   tune          -> per-backend strategy board (registry + autotuner winners)
   lm_step       -> host-framework sanity timings for the 10 assigned archs
+  fit           -> calibration path: loss/grad eval + per-step fit cost
   roofline      -> §Roofline report from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -17,12 +18,13 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fft, lm_step, pipeline, rasterization, scatter,
-                            stages, tune)
+    from benchmarks import (fft, fit, lm_step, pipeline, rasterization,
+                            scatter, stages, tune)
     from benchmarks.common import write_json
 
     print("name,us_per_call,derived")
-    for mod in [rasterization, scatter, pipeline, stages, fft, tune, lm_step]:
+    for mod in [rasterization, scatter, pipeline, stages, fft, tune, lm_step,
+                fit]:
         try:
             mod.main()
         except Exception:  # noqa: BLE001 — keep the harness going

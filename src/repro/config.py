@@ -169,7 +169,14 @@ class LArTPCConfig:
     # electrons per depo (mean), fluctuation model
     electrons_per_depo: float = 5000.0
     fluctuate: bool = True
-    rng_strategy: str = "counter"  # counter | pool | none
+    # counter : threefry counter RNG, normal approximation (TPU-native)
+    # pool    : paper-faithful pre-computed normal pool
+    # relaxed : the counter draw with NaN-free reverse-mode gradients —
+    #           value-identical forward (bit-for-bit with "counter"), but
+    #           the zero-variance sqrt is reparameterized so jax.grad of
+    #           the pipeline is finite (see docs/calibration.md)
+    # none    : no fluctuation
+    rng_strategy: str = "counter"  # counter | pool | relaxed | none
     # xla: one scatter HLO (best single-device default);
     # sort_segment: sorted sequential-traffic form (TPU-oriented);
     # pallas: owner-computes tile kernel (dense tile grid);
@@ -192,9 +199,21 @@ class LArTPCConfig:
     # response
     response_ticks: int = 200
     response_wires: int = 21       # +-10 wires induction span
+    # overall response amplitude (dimensionless gain on the normalized
+    # kernel) and electronics shaping time [us] — exposed as config fields
+    # so gradient-based calibration (docs/calibration.md) can fit them; the
+    # defaults reproduce the previous hard-coded response bit-for-bit
+    response_gain: float = 1.0
+    response_shaping_us: float = 2.0
     noise_rms_adc: float = 1.2
     adc_per_electron: float = 0.01
     adc_baseline: float = 900.0
+    # straight-through estimator for the digitize round/clip: forward values
+    # are UNCHANGED (round-then-clip and clip-then-round agree for integer
+    # rails) but the output stays float32 and gradients pass straight
+    # through inside the ADC rails (zero outside). Default False keeps the
+    # int16 seed path bit-identical; the fit driver flips it on.
+    digitize_ste: bool = False
     dtype: str = "float32"
     # ---- multi-plane readout geometry (ISSUE 5 tentpole) ----
     # number of wire planes read out per event. 1 (the default) is the seed

@@ -19,8 +19,16 @@ from repro.core.response import (DetectorResponse, make_plane_responses,
                                  make_response)
 from repro.core.stages import SimGraph, SimOutput, SimState, Stage, build_sim_graph
 from repro.core.pipeline import simulate, make_sim_fn
-from repro.core.batch import (EventBatch, event_keys, make_batched_sim_fn,
-                              pack_events, shard_events, simulate_events)
+from repro.core.batch import (EventBatch, PhysicalEventBatch, event_keys,
+                              make_batched_sim_fn, pack_events,
+                              pack_physical_events, shard_events,
+                              simulate_events)
+from repro.core.fit import (FitParam, FitResult, FitSpec, FitTargets,
+                            assert_differentiable_config, calibrate,
+                            fit_config, make_fit_loss, make_fit_targets,
+                            run_fit, spec_from_names)
+from repro.core.gradcheck import (GradcheckResult, finite_difference_grad,
+                                  gradcheck, stage_gradcheck_suite)
 from repro.core.deconvolve import (deconvolve, make_deconv_filter,
                                    make_plane_deconv_filters, measured_signal)
 from repro.core.hitfind import HitSet, compact_hits, find_hits, hits_to_tuples
@@ -45,11 +53,28 @@ __all__ = [
     "simulate",
     "make_sim_fn",
     "EventBatch",
+    "PhysicalEventBatch",
     "event_keys",
     "pack_events",
+    "pack_physical_events",
     "shard_events",
     "simulate_events",
     "make_batched_sim_fn",
+    "FitParam",
+    "FitResult",
+    "FitSpec",
+    "FitTargets",
+    "assert_differentiable_config",
+    "calibrate",
+    "fit_config",
+    "make_fit_loss",
+    "make_fit_targets",
+    "run_fit",
+    "spec_from_names",
+    "GradcheckResult",
+    "finite_difference_grad",
+    "gradcheck",
+    "stage_gradcheck_suite",
     "deconvolve",
     "make_deconv_filter",
     "make_plane_deconv_filters",

@@ -85,6 +85,75 @@ class EventBatch(NamedTuple):
                        charge=self.charge[e])
 
 
+class PhysicalEventBatch(NamedTuple):
+    """Padded structure-of-arrays container for E *physical* events.
+
+    The calibration path (``repro.core.fit``) batches events upstream of the
+    drift stage — gradients must flow through transport — so it packs
+    ``PhysicalDepoSet``s rather than drifted ``DepoSet``s. Leaves are
+    (E, N_max) float32; padding rows carry q = 0 (a zero-charge depo drifts
+    to a zero-charge depo and rasterizes to nothing).
+    """
+
+    x: jax.Array
+    y: jax.Array
+    z: jax.Array
+    t: jax.Array
+    q: jax.Array
+    n_depos: jax.Array
+
+    @property
+    def num_events(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def max_depos(self) -> int:
+        return self.x.shape[-1]
+
+    def physical_set(self):
+        """View as a PhysicalDepoSet of (E, N_max) leaves — the vmap operand."""
+        from repro.core.drift import PhysicalDepoSet
+
+        return PhysicalDepoSet(x=self.x, y=self.y, z=self.z, t=self.t,
+                               q=self.q)
+
+    def event(self, e: int):
+        """The padded per-event slice (keeps the (N_max,) padded length)."""
+        from repro.core.drift import PhysicalDepoSet
+
+        return PhysicalDepoSet(x=self.x[e], y=self.y[e], z=self.z[e],
+                               t=self.t[e], q=self.q[e])
+
+
+def pack_physical_events(events, pad_to: Optional[int] = None,
+                         pad_multiple: int = 1) -> PhysicalEventBatch:
+    """Pack E ragged PhysicalDepoSets into one padded (E, N_max) batch.
+
+    The physical-frame sibling of ``pack_events``: all leaves pad with 0 —
+    a q = 0 depo at the frame origin is inert through drift (charge 0 after
+    recombination/lifetime scaling) and through rasterization (all-zero
+    patch, fluctuation variance 0). Caveat: the *RNG realization* of the
+    sampling strategies still depends on the padded length (threefry draws
+    pair counter i with i + n/2 over the flattened patch block), so runs are
+    bit-comparable only at equal ``N_max`` — which is why fit targets and
+    the fit loss share one batch (``repro.core.fit``).
+    """
+    if not events:
+        raise ValueError("pack_physical_events needs at least one event")
+    n_max = max(max(ev.n for ev in events), 1)
+    if pad_to is not None:
+        n_max = max(n_max, pad_to)
+    n_max = -(-n_max // pad_multiple) * pad_multiple
+
+    def padf(x):
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n_max - x.shape[-1])])
+
+    stacked = {f: jnp.stack([padf(getattr(ev, f)) for ev in events])
+               for f in ("x", "y", "z", "t", "q")}
+    n_depos = jnp.asarray([ev.n for ev in events], jnp.int32)
+    return PhysicalEventBatch(n_depos=n_depos, **stacked)
+
+
 def empty_event(planes: int = 1) -> DepoSet:
     """A zero-depo event (used to pad the *event* axis of a short batch).
 

@@ -53,7 +53,12 @@ def measured_signal(adc: jax.Array, cfg: LArTPCConfig) -> jax.Array:
     count is 1/adc_per_electron = 100 electrons, which is why hit thresholds
     sit well above a single count.
     """
-    denom = max(float(cfg.adc_per_electron), 1e-30)
+    gain = cfg.adc_per_electron
+    if isinstance(gain, jax.Array):
+        # traced gain (gradient-based calibration, repro.core.fit)
+        denom = jnp.maximum(gain, 1e-30)
+    else:
+        denom = max(float(gain), 1e-30)
     return (adc.astype(jnp.float32) - cfg.adc_baseline) / denom
 
 

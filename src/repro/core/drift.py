@@ -124,8 +124,15 @@ def drift_depos(pdepos: PhysicalDepoSet, cfg: LArTPCConfig) -> DepoSet:
                        (cfg.patch_ticks / 2 - 1) / cfg.nsigma)
 
     q = pdepos.q * cfg.recombination
-    if cfg.electron_lifetime_us > 0.0:
-        q = q * jnp.exp(-t_drift / cfg.electron_lifetime_us)
+    lifetime = cfg.electron_lifetime_us
+    if isinstance(lifetime, jax.Array):
+        # traced lifetime (gradient-based calibration, repro.core.fit):
+        # the enable/disable branch must be data-dependent. The guarded
+        # denominator keeps the lifetime<=0 branch NaN-free under grad.
+        atten = jnp.exp(-t_drift / jnp.maximum(lifetime, 1e-6))
+        q = q * jnp.where(lifetime > 0.0, atten, 1.0)
+    elif lifetime > 0.0:
+        q = q * jnp.exp(-t_drift / lifetime)
 
     return DepoSet(
         wire=wire.astype(jnp.float32),

@@ -117,6 +117,18 @@ def fft_convolve(grid: jax.Array, resp: DetectorResponse,
 
 
 def digitize(signal: jax.Array, cfg: LArTPCConfig) -> jax.Array:
-    """Voltage -> ADC counts (12-bit), paper's M(t,x) measurement."""
+    """Voltage -> ADC counts (12-bit), paper's M(t,x) measurement.
+
+    ``cfg.digitize_ste`` selects a straight-through estimator for the
+    round/clip quantization: the forward VALUES are identical (round and
+    clip commute when the rails are integers, so ``round(clip(x)) ==
+    clip(round(x))``) but the result stays float32 and the backward pass
+    treats rounding as identity while the clip still zeroes gradients
+    outside the ADC rails — the standard STE for quantizers. The default
+    (``False``) is the bit-identical int16 seed path.
+    """
     adc = cfg.adc_baseline + cfg.adc_per_electron * signal
+    if cfg.digitize_ste:
+        clipped = jnp.clip(adc, 0.0, 4095.0)
+        return clipped + jax.lax.stop_gradient(jnp.round(clipped) - clipped)
     return jnp.clip(jnp.round(adc), 0, 4095).astype(jnp.int16)

@@ -44,6 +44,41 @@ def fluctuate_counter(key: jax.Array, patches: jax.Array, charge: jax.Array):
     return binomial_normal_approx(patches, charge, normals)
 
 
+def binomial_normal_relaxed(patches: jax.Array, charge: jax.Array,
+                            normals: jax.Array):
+    """The reparameterized (differentiable) form of the binomial draw.
+
+    FORWARD-IDENTICAL to ``binomial_normal_approx`` — for var > 0 the same
+    ``sqrt(var)`` is evaluated on the same values, and at var == 0 both
+    yield exactly 0 — but the zero-variance branch is masked *before* the
+    sqrt, so ``d sqrt(var)/d var = 1/(2 sqrt(var))`` never evaluates at 0
+    and reverse-mode gradients through padding rows / empty pixels are 0
+    instead of NaN. This is the pathwise (reparameterization) estimator:
+    the standard normals are the fixed exogenous noise, and gradients flow
+    through the mean (``patches``) and the std ``sqrt(p·q·(1-p))``.
+    """
+    q = jnp.maximum(charge[:, None, None], 1.0)
+    p = jnp.clip(patches / q, 0.0, 1.0)
+    var = jnp.maximum(patches * (1.0 - p), 0.0)
+    safe = jnp.where(var > 0.0, var, 1.0)
+    std = jnp.where(var > 0.0, jnp.sqrt(safe), 0.0)
+    out = patches + std * normals
+    return jnp.maximum(out, 0.0)
+
+
+def fluctuate_counter_relaxed(key: jax.Array, patches: jax.Array,
+                              charge: jax.Array):
+    """``fluctuate_counter`` with finite gradients (``rng_strategy="relaxed"``).
+
+    Draws the SAME threefry normals from the same key, so the sampled
+    pipeline stays bit-identical to the default counter strategy; only the
+    backward pass differs (no NaN at zero variance). The calibration loss
+    (``repro.core.fit``) requires this strategy when ``cfg.fluctuate``.
+    """
+    normals = jax.random.normal(key, patches.shape, patches.dtype)
+    return binomial_normal_relaxed(patches, charge, normals)
+
+
 def make_pool(key: jax.Array, pool_size: int = 1 << 20) -> jax.Array:
     """Pre-computed standard-normal pool (paper's ref-CUDA/Kokkos strategy)."""
     return jax.random.normal(key, (pool_size,), jnp.float32)

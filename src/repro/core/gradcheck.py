@@ -1,0 +1,326 @@
+"""Finite-difference gradient verification for the differentiable sim.
+
+Library code shared by ``tests/test_gradcheck.py`` and the CI gate
+(``launch/fit.py --gradcheck``): central-difference numerical gradients
+checked against ``jax.grad`` for scalar losses routed through each stage of
+the simulation chain, at smoke size.
+
+Tolerances are float32-grade by design. A central difference carries
+O(h^2) truncation error plus O(ulp/h) roundoff from the f32 forward, so the
+checks use per-case step sizes and a relative tolerance of a few percent —
+tight enough to catch a wrong/zero/NaN gradient path (the failure modes that
+matter), loose enough not to flake on accumulation-order noise. Stages with
+quantized forwards (digitize) are checked end-to-end through an MSE loss
+whose averaging over the readout grid smooths the staircase; the exact STE
+pass-through property is asserted analytically in the tests instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LArTPCConfig
+
+
+class GradcheckResult(NamedTuple):
+    """Outcome of one analytic-vs-numeric gradient comparison."""
+
+    name: str
+    fields: tuple          # parameter names, theta order
+    analytic: tuple        # jax.grad, per parameter
+    numeric: tuple         # central differences, per parameter
+    max_abs_err: float
+    max_rel_err: float     # |a - n| / max(|a|, |n|, atol) per element, maxed
+    ok: bool
+
+    def __str__(self) -> str:  # the table row --gradcheck prints
+        mark = "ok " if self.ok else "FAIL"
+        return (f"[{mark}] {self.name:<44s} rel_err={self.max_rel_err:.3e} "
+                f"abs_err={self.max_abs_err:.3e}")
+
+
+def finite_difference_grad(f: Callable, theta: jax.Array,
+                           eps: float = 1e-3) -> jax.Array:
+    """Central-difference gradient of scalar ``f`` at ``theta``.
+
+    Per-element step ``h_i = eps * max(|theta_i|, 1)`` — relative for O(1)+
+    parameters, absolute ``eps`` for small ones; the difference quotient is
+    accumulated in float64 on the host.
+    """
+    theta = jnp.asarray(theta, jnp.float32)
+    grads = []
+    for i in range(theta.shape[0]):
+        h = eps * max(abs(float(theta[i])), 1.0)
+        fp = float(f(theta.at[i].add(h)))
+        fm = float(f(theta.at[i].add(-h)))
+        grads.append((fp - fm) / (2.0 * h))
+    return jnp.asarray(grads, jnp.float32)
+
+
+def gradcheck(f: Callable, theta, *, name: str = "",
+              fields: Sequence[str] = (), eps: float = 1e-3,
+              rtol: float = 5e-2, atol: float = 1e-4) -> GradcheckResult:
+    """Compare ``jax.grad(f)`` to central differences at ``theta``.
+
+    Passes when every element satisfies
+    ``|analytic - numeric| <= atol + rtol * max(|analytic|, |numeric|)``.
+    ``f`` is jit-compiled here (one trace serves the 1 + 2n evaluations).
+    """
+    theta = jnp.asarray(theta, jnp.float32)
+    fj = jax.jit(f)
+    analytic = jax.jit(jax.grad(f))(theta)
+    if not bool(jnp.all(jnp.isfinite(analytic))):
+        return GradcheckResult(name=name, fields=tuple(fields),
+                               analytic=tuple(map(float, analytic)),
+                               numeric=(float("nan"),) * theta.shape[0],
+                               max_abs_err=float("inf"),
+                               max_rel_err=float("inf"), ok=False)
+    numeric = finite_difference_grad(fj, theta, eps)
+    abs_err = jnp.abs(analytic - numeric)
+    scale = jnp.maximum(jnp.maximum(jnp.abs(analytic), jnp.abs(numeric)),
+                        atol)
+    rel_err = abs_err / scale
+    ok = bool(jnp.all(abs_err <= atol + rtol * jnp.maximum(
+        jnp.abs(analytic), jnp.abs(numeric))))
+    return GradcheckResult(
+        name=name, fields=tuple(fields),
+        analytic=tuple(float(x) for x in analytic),
+        numeric=tuple(float(x) for x in numeric),
+        max_abs_err=float(jnp.max(abs_err)),
+        max_rel_err=float(jnp.max(rel_err)), ok=ok)
+
+
+# ---------------------------------------------------------------------------
+# The per-stage suite
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GradcheckCase:
+    """One named scalar-loss gradient check.
+
+    ``build(cfg, key)`` returns ``(f, theta0)``: the scalar loss over the
+    raw (identity-transform) parameter vector and the point to check at.
+    """
+
+    name: str
+    fields: tuple
+    build: Callable
+    eps: float = 1e-3
+    rtol: float = 5e-2
+    atol: float = 1e-4
+
+
+def _base_cfg(cfg: Optional[LArTPCConfig]) -> LArTPCConfig:
+    from repro.core.fit import fit_config
+
+    if cfg is None:
+        from repro.config import get_config
+
+        cfg = get_config("lartpc-uboone", smoke=True)
+    return fit_config(cfg)
+
+
+def _weights(key: jax.Array, shape) -> jax.Array:
+    """A fixed random projection: ``sum(x * w)`` probes the full Jacobian
+    instead of the row-sum (which charge conservation can make trivially
+    flat, e.g. d(sum grid)/d(diffusion) ~ 0 away from edges)."""
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _drift_case(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.depo import generate_physical_depos
+    from repro.core.drift import transport
+
+    pdepos = generate_physical_depos(key, cfg)
+    w = _weights(jax.random.fold_in(key, 1), (pdepos.n,))
+
+    def f(theta):
+        tcfg = dataclasses.replace(cfg, electron_lifetime_us=theta[0],
+                                   recombination=theta[1])
+        return jnp.sum(transport(pdepos, tcfg).charge * w) / pdepos.n
+
+    return f, jnp.asarray([50.0, 0.7], jnp.float32)
+
+
+def _charge_grid_case(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.depo import generate_physical_depos
+    from repro.core.drift import transport
+    from repro.core.stages import compute_charge_grid
+
+    pdepos = generate_physical_depos(key, cfg)
+    kf = jax.random.fold_in(key, 2)
+    w = _weights(jax.random.fold_in(key, 1),
+                 (cfg.num_wires, cfg.num_ticks))
+
+    def f(theta):
+        tcfg = dataclasses.replace(cfg, diffusion_scale=theta[0])
+        grid = compute_charge_grid(kf, transport(pdepos, tcfg), tcfg)
+        return jnp.sum(grid * w) / grid.size
+
+    return f, jnp.asarray([cfg.diffusion_scale], jnp.float32)
+
+
+def _response_case(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.depo import generate_depos
+    from repro.core.fft_conv import fft_convolve
+    from repro.core.response import make_response
+    from repro.core.stages import compute_charge_grid
+
+    depos = generate_depos(key, cfg)
+    grid = compute_charge_grid(jax.random.fold_in(key, 2), depos, cfg)
+    w = _weights(jax.random.fold_in(key, 1), grid.shape)
+
+    def f(theta):
+        tcfg = dataclasses.replace(cfg, response_gain=theta[0],
+                                   response_shaping_us=theta[1])
+        resp = make_response(tcfg)
+        return jnp.sum(fft_convolve(grid, resp, tcfg.fft_strategy) * w
+                       ) / grid.size
+
+    return f, jnp.asarray([1.3, 1.7], jnp.float32)
+
+
+def _noise_case(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.noise import simulate_noise
+
+    kn = jax.random.fold_in(key, 3)
+    w = _weights(jax.random.fold_in(key, 1),
+                 (cfg.num_wires, cfg.num_ticks))
+
+    def f(theta):
+        tcfg = dataclasses.replace(cfg, noise_rms_adc=theta[0])
+        noise = simulate_noise(kn, tcfg)
+        return jnp.sum(noise * w) / noise.size
+
+    return f, jnp.asarray([cfg.noise_rms_adc], jnp.float32)
+
+
+def _deconvolve_case(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.deconvolve import (deconvolve, make_deconv_filter,
+                                       measured_signal)
+    from repro.core.response import make_response
+    from repro.core.stages import build_sim_graph
+
+    graph = build_sim_graph(cfg, None)
+    adc = graph.run(key, _physical_event(cfg, key)).adc
+    w = _weights(jax.random.fold_in(key, 1), adc.shape)
+
+    def f(theta):
+        tcfg = dataclasses.replace(cfg, adc_per_electron=theta[0],
+                                   adc_baseline=theta[1])
+        filt = make_deconv_filter(make_response(tcfg), tcfg)
+        decon = deconvolve(measured_signal(adc, tcfg), filt,
+                           tcfg.deconv_strategy)
+        return jnp.sum(decon * w) / (decon.size * 1e3)
+
+    return f, jnp.asarray([cfg.adc_per_electron, cfg.adc_baseline],
+                          jnp.float32)
+
+
+def _physical_event(cfg: LArTPCConfig, key: jax.Array):
+    from repro.core.depo import generate_physical_depos
+
+    return generate_physical_depos(jax.random.fold_in(key, 7), cfg)
+
+
+def _end_to_end_case(cfg: LArTPCConfig, key: jax.Array):
+    """The full chain, digitize STE included, through the fit loss itself —
+    the gradient the calibration driver actually descends. FD over a
+    quantized forward leans on MSE averaging to smooth the staircase, hence
+    the larger step and looser tolerance on this case."""
+    from repro.core.fit import (FitParam, FitSpec, make_fit_loss,
+                                make_fit_targets)
+
+    # boost the deposit size so a few-percent parameter change moves the
+    # waveform by many ADC counts: at the smoke default (~64 counts above
+    # baseline) the loss is quantization-dominated and a finite difference
+    # measures staircase-crossing density, not the smooth derivative the
+    # STE provides
+    cfg = dataclasses.replace(cfg,
+                              electrons_per_depo=30 * cfg.electrons_per_depo)
+    spec = FitSpec(params=(FitParam("recombination"),
+                           FitParam("adc_per_electron")))
+    targets = make_fit_targets(cfg, key, num_events=1)
+    loss = make_fit_loss(cfg, spec, targets)
+    truth = jnp.asarray([cfg.recombination, cfg.adc_per_electron],
+                        jnp.float32)
+
+    def f(mult):
+        # multiplier coordinates: theta_i = mult_i * truth_i keeps every
+        # component O(1), so the FD step is a uniform ~2% relative
+        # perturbation (an absolute step on adc_per_electron ~ 0.01 would
+        # dwarf the parameter)
+        return loss(mult * truth)
+
+    # check away from the truth (at truth the loss floor is exactly 0 and
+    # both gradients vanish — nothing to compare)
+    return f, jnp.asarray([0.9, 1.1], jnp.float32)
+
+
+def _recon_loss_case(cfg: LArTPCConfig, key: jax.Array):
+    """The fit loss with the deconvolved-charge term: gradients must flow
+    through digitize -> measured_signal -> deconvolve as well."""
+    from repro.core.fit import (FitParam, FitSpec, make_fit_loss,
+                                make_fit_targets)
+
+    spec = FitSpec(params=(FitParam("response_gain"),))
+    targets = make_fit_targets(cfg, key, num_events=1, recon=True)
+    loss = make_fit_loss(cfg, spec, targets, decon_weight=1e-4)
+
+    def f(theta):
+        return loss(theta)
+
+    return f, jnp.asarray([1.15], jnp.float32)
+
+
+def stage_gradcheck_cases() -> List[GradcheckCase]:
+    """The per-stage check matrix (see module docstring for tolerances)."""
+    return [
+        GradcheckCase("drift/lifetime+recombination",
+                      ("electron_lifetime_us", "recombination"),
+                      _drift_case, eps=1e-3, rtol=2e-2),
+        GradcheckCase("charge_grid/diffusion_scale",
+                      ("diffusion_scale",),
+                      _charge_grid_case, eps=1e-4, rtol=5e-2),
+        GradcheckCase("convolve/response_gain+shaping",
+                      ("response_gain", "response_shaping_us"),
+                      _response_case, eps=1e-3, rtol=3e-2),
+        GradcheckCase("noise/noise_rms_adc",
+                      ("noise_rms_adc",),
+                      _noise_case, eps=1e-3, rtol=2e-2),
+        GradcheckCase("deconvolve/adc_gain+baseline",
+                      ("adc_per_electron", "adc_baseline"),
+                      _deconvolve_case, eps=1e-4, rtol=5e-2),
+        GradcheckCase("e2e/fit_loss (STE digitize)",
+                      ("recombination", "adc_per_electron"),
+                      _end_to_end_case, eps=2e-2, rtol=2e-1, atol=1e-3),
+        GradcheckCase("e2e/fit_loss+decon term",
+                      ("response_gain",),
+                      _recon_loss_case, eps=2e-2, rtol=2e-1, atol=1e-3),
+    ]
+
+
+def stage_gradcheck_suite(cfg: Optional[LArTPCConfig] = None, *,
+                          seed: int = 0,
+                          cases: Optional[Sequence[GradcheckCase]] = None,
+                          ) -> List[GradcheckResult]:
+    """Run the (or a) case matrix at smoke size; returns one result per case.
+
+    ``cfg`` defaults to the smoke config pushed through ``fit_config`` —
+    pass a multi-plane or bf16 variant to re-run the matrix under it (the
+    tests do). All-green is the CI gate: ``all(r.ok for r in results)``.
+    """
+    base = _base_cfg(cfg)
+    key = jax.random.key(seed)
+    results = []
+    for i, case in enumerate(stage_gradcheck_cases() if cases is None
+                             else cases):
+        f, theta0 = case.build(base, jax.random.fold_in(key, i))
+        results.append(gradcheck(f, theta0, name=case.name,
+                                 fields=case.fields, eps=case.eps,
+                                 rtol=case.rtol, atol=case.atol))
+    return results

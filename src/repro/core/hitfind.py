@@ -111,7 +111,8 @@ def _wire_scan(vals: jax.Array, threshold, cap: int):
 
 
 @register_strategy("hit_find", "scan",
-                   note="per-wire fori_loop run scanner, vmap over wires")
+                   note="per-wire fori_loop run scanner, vmap over wires",
+                   differentiable=False)
 def hit_find_scan(decon: jax.Array, cfg: LArTPCConfig):
     thr = jnp.float32(cfg.hit_threshold)
     cap = int(cfg.max_hits_per_wire)
@@ -128,7 +129,8 @@ def _pallas_viable(ctx) -> bool:
 
 
 @register_strategy("hit_find", "pallas", available=_pallas_viable,
-                   note="one Pallas grid step per wire (same scan body)")
+                   note="one Pallas grid step per wire (same scan body)",
+                   differentiable=False)
 def hit_find_pallas(decon: jax.Array, cfg: LArTPCConfig):
     from repro.kernels.hitfind.ops import find_wire_hits_pallas
 

@@ -51,6 +51,8 @@ def _fluctuate(key, patches, charge, cfg: LArTPCConfig, pool=None):
     if cfg.rng_strategy == "pool":
         assert pool is not None, "pool strategy requires a pre-computed pool"
         return fl.fluctuate_pool(pool, patches, charge)
+    if cfg.rng_strategy == "relaxed":
+        return fl.fluctuate_counter_relaxed(key, patches, charge)
     return fl.fluctuate_counter(key, patches, charge)
 
 
@@ -85,7 +87,7 @@ def _fused_viable(ctx) -> bool:
     # pre-computed "pool" stream cannot be reproduced in kernel, and off-TPU
     # the Pallas interpreter makes production grids prohibitive
     cfg = ctx.cfg
-    if cfg is None or (cfg.fluctuate and cfg.rng_strategy == "pool"):
+    if cfg is None or (cfg.fluctuate and cfg.rng_strategy in ("pool", "relaxed")):
         return False
     if ctx.backend == "tpu":
         return True
@@ -97,16 +99,17 @@ def _fused_key(key: jax.Array, cfg: LArTPCConfig) -> Optional[jax.Array]:
     """The in-kernel RNG key, or None when the config wants no fluctuation."""
     if cfg.fluctuate and cfg.rng_strategy == "counter":
         return key
-    if cfg.fluctuate and cfg.rng_strategy == "pool":
+    if cfg.fluctuate and cfg.rng_strategy in ("pool", "relaxed"):
         raise ValueError(
             "fused charge-grid strategies draw in-kernel counter randomness "
-            "and cannot reproduce the pre-computed pool stream; use "
+            "and cannot reproduce the pre-computed pool/relaxed streams; use "
             "rng_strategy='counter'/'none' or charge_grid_strategy='unfused'")
     return None
 
 
 @register_strategy("charge_grid", "fused_pallas", available=_fused_viable,
-                   note="fused rasterize+fluctuate+scatter Pallas kernel")
+                   note="fused rasterize+fluctuate+scatter Pallas kernel",
+                   differentiable=False)
 def charge_grid_fused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
                       pool: Optional[jax.Array] = None) -> jax.Array:
     from repro.kernels.fused_sim.ops import simulate_charge_grid
@@ -117,7 +120,8 @@ def charge_grid_fused(key: jax.Array, depos: DepoSet, cfg: LArTPCConfig,
 
 @register_strategy("charge_grid", "fused_pallas_compact",
                    available=_fused_viable,
-                   note="fused kernel over occupied tiles only")
+                   note="fused kernel over occupied tiles only",
+                   differentiable=False)
 def charge_grid_fused_compact(key: jax.Array, depos: DepoSet,
                               cfg: LArTPCConfig,
                               pool: Optional[jax.Array] = None) -> jax.Array:

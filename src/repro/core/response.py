@@ -72,7 +72,7 @@ def make_response(cfg: LArTPCConfig, plane: str = "induction") -> DetectorRespon
     rw, rt = cfg.response_wires, cfg.response_ticks
     t_us = jnp.arange(rt, dtype=jnp.float32) * cfg.tick_us
     time_resp = _field_time(t_us, plane)
-    elec = _semigaussian(t_us)
+    elec = _semigaussian(t_us, shaping_us=cfg.response_shaping_us)
     # time response = field (x) electronics, linear convolution cropped to rt
     tr = jnp.convolve(time_resp, elec, mode="full")[:rt]
     tr = tr / (jnp.max(jnp.abs(tr)) + 1e-30)
@@ -83,6 +83,13 @@ def make_response(cfg: LArTPCConfig, plane: str = "induction") -> DetectorRespon
     wire_prof = wire_prof / jnp.sum(wire_prof)
 
     kernel = wire_prof[:, None] * tr[None, :]
+    # overall amplitude: a calibration degree of freedom. A *python* 1.0
+    # skips the multiply so the default traced program is unchanged; a
+    # traced gain (repro.core.fit differentiating the response) always
+    # applies (multiplying by exactly 1.0 is value-exact anyway).
+    gain = cfg.response_gain
+    if isinstance(gain, jax.Array) or gain != 1.0:
+        kernel = kernel * gain
 
     w_pad = next_fast_len(cfg.num_wires + rw - 1)
     t_pad = next_fast_len(cfg.num_ticks + rt - 1)

@@ -108,7 +108,8 @@ def _pallas_viable(ctx) -> bool:
 
 
 @register_strategy("scatter_add", "pallas", available=_pallas_viable,
-                   note="owner-computes tile kernel; interpret off-TPU")
+                   note="owner-computes tile kernel; interpret off-TPU",
+                   differentiable=False)
 def scatter_pallas(patches: jax.Array, w0: jax.Array, t0: jax.Array,
                    cfg: LArTPCConfig, interpret: bool | None = None):
     from repro.kernels.scatter_add.ops import scatter_add_tiles
@@ -121,7 +122,8 @@ def scatter_pallas(patches: jax.Array, w0: jax.Array, t0: jax.Array,
 
 
 @register_strategy("scatter_add", "pallas_compact", available=_pallas_viable,
-                   note="owner-computes kernel over occupied tiles only")
+                   note="owner-computes kernel over occupied tiles only",
+                   differentiable=False)
 def scatter_pallas_compact(patches: jax.Array, w0: jax.Array, t0: jax.Array,
                            cfg: LArTPCConfig, interpret: bool | None = None):
     from repro.kernels.scatter_add.ops import scatter_add_tiles_compact

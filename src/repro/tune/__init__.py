@@ -27,8 +27,10 @@ from repro.tune.registry import (
     TuneContext,
     available_strategies,
     default_strategy,
+    differentiable_strategies,
     ensure_registered,
     get_strategy,
+    is_differentiable,
     list_ops,
     make_context,
     register_strategy,
@@ -47,8 +49,10 @@ __all__ = [
     "cache_key",
     "candidate_thunks",
     "default_strategy",
+    "differentiable_strategies",
     "ensure_registered",
     "get_strategy",
+    "is_differentiable",
     "list_ops",
     "make_context",
     "median_timer",

@@ -47,13 +47,21 @@ class TuneContext:
 
 @dataclasses.dataclass(frozen=True)
 class Strategy:
-    """One registered candidate implementation of a hot op."""
+    """One registered candidate implementation of a hot op.
+
+    ``differentiable`` declares whether ``jax.grad`` can flow through this
+    candidate: plain-XLA implementations are (True, the default); Pallas
+    kernels without a custom VJP and discrete-output ops (hit finding) are
+    not. The calibration path (``repro.core.fit``) restricts strategy
+    resolution to differentiable candidates via this predicate.
+    """
 
     op: str
     name: str
     fn: Callable
     available: Optional[Callable[[TuneContext], bool]] = None
     note: str = ""
+    differentiable: bool = True
 
     def is_available(self, ctx: TuneContext) -> bool:
         return self.available is None or bool(self.available(ctx))
@@ -70,11 +78,13 @@ def register_strategy(
     *,
     available: Optional[Callable[[TuneContext], bool]] = None,
     note: str = "",
+    differentiable: bool = True,
 ):
     """Decorator: register ``fn`` as candidate ``name`` of hot op ``op``."""
 
     def deco(fn):
-        _OPS.setdefault(op, {})[name] = Strategy(op, name, fn, available, note)
+        _OPS.setdefault(op, {})[name] = Strategy(op, name, fn, available,
+                                                 note, differentiable)
         return fn
 
     return deco
@@ -129,6 +139,17 @@ def get_strategy(op: str, name: str) -> Strategy:
 def available_strategies(op: str, ctx: TuneContext) -> Dict[str, Strategy]:
     """Candidates of ``op`` whose availability predicate passes for ``ctx``."""
     return {n: s for n, s in strategies(op).items() if s.is_available(ctx)}
+
+
+def differentiable_strategies(op: str) -> Dict[str, Strategy]:
+    """Candidates of ``op`` that reverse-mode autodiff can flow through —
+    the availability predicate of the calibration/fit path."""
+    return {n: s for n, s in strategies(op).items() if s.differentiable}
+
+
+def is_differentiable(op: str, name: str) -> bool:
+    """Whether candidate ``name`` of ``op`` supports ``jax.grad``."""
+    return get_strategy(op, name).differentiable
 
 
 def default_strategy(op: str, backend: Optional[str] = None) -> str:

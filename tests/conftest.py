@@ -9,6 +9,15 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "subprocess: spawns fresh interpreter(s) with forced host devices "
+        "(slow; CI runs these in a dedicated job via '-m subprocess' and "
+        "keeps them out of the per-version matrix with '-m \"not "
+        "subprocess\"')")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)

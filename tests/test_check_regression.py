@@ -51,6 +51,17 @@ class TestGatePasses:
         out = capsys.readouterr().out
         assert "stages/a_total" in out and "stages/b_total" in out
 
+    def test_summary_reports_matched_count_per_glob(self, files, capsys):
+        """The gate summary says how many rows each selector matched — a
+        family glob that quietly shrank to one row shows in the CI log."""
+        base, fresh = files
+        assert cr.check(base, fresh,
+                        ["stages/*_total", "pipeline/fig4"], 2.0) == 0
+        out = capsys.readouterr().out
+        assert "gated 4 record(s)" in out
+        assert "'stages/*_total': 3" in out
+        assert "'pipeline/fig4': 1" in out
+
     def test_fresh_only_name_warns_not_fails(self, files, capsys):
         """A plain name that exists only in fresh is a new benchmark:
         reported as (new), exit 0."""

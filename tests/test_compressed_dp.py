@@ -4,6 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.subprocess
+
 
 SCRIPT = r"""
 import os

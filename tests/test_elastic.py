@@ -6,6 +6,10 @@ import subprocess
 import sys
 import tempfile
 
+import pytest
+
+pytestmark = pytest.mark.subprocess
+
 
 SCRIPT_SAVE = r"""
 import os, json

@@ -1,0 +1,269 @@
+"""Calibration machinery (``repro.core.fit``): FitParam/FitSpec transforms,
+the differentiable-config audit, physical-event packing, and the optimizer
+drivers — everything below the full fits exercised by ``launch/fit.py``
+(--smoke in CI) and the gradient checks in ``tests/test_gradcheck.py``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.batch import pack_physical_events
+from repro.core.fit import (FitParam, FitSpec, assert_differentiable_config,
+                            calibrate, fit_config, make_fit_loss,
+                            make_fit_targets, run_fit, spec_from_names)
+from repro.core.stages import build_sim_graph
+
+CFG = get_config("lartpc-uboone", smoke=True)
+
+
+# ---------------------------------------------------------------------------
+# FitParam: transforms and validation
+# ---------------------------------------------------------------------------
+
+
+class TestFitParam:
+    def test_transform_auto_resolution(self):
+        assert FitParam("recombination").resolved_transform == "identity"
+        assert FitParam("recombination", lo=0.1).resolved_transform == "log"
+        assert (FitParam("recombination", lo=0.1, hi=1.0).resolved_transform
+                == "sigmoid")
+
+    @pytest.mark.parametrize("param,value", [
+        (FitParam("recombination"), 0.75),
+        (FitParam("electron_lifetime_us", lo=5.0), 60.0),
+        (FitParam("noise_rms_adc", lo=0.2, hi=5.0), 1.2),
+    ], ids=["identity", "log", "sigmoid"])
+    def test_theta_value_round_trip(self, param, value):
+        theta = param.to_theta(value)
+        assert float(param.to_value(jnp.asarray(theta))) == pytest.approx(
+            value, rel=1e-5)
+
+    def test_bounds_enforced_by_transform(self):
+        """The transform keeps the value inside the box for ANY theta — the
+        optimizer never needs clipping."""
+        p = FitParam("recombination", lo=0.2, hi=1.0)
+        for theta in (-50.0, -1.0, 0.0, 3.0, 50.0):
+            v = float(p.to_value(jnp.asarray(theta)))
+            assert 0.2 <= v <= 1.0
+        q = FitParam("electron_lifetime_us", lo=5.0)
+        assert float(q.to_value(jnp.asarray(-40.0))) >= 5.0
+
+    def test_unfittable_field_rejected(self):
+        with pytest.raises(ValueError, match="not a fittable"):
+            FitParam("num_wires")
+
+    def test_sigmoid_needs_bounds(self):
+        with pytest.raises(ValueError, match="needs"):
+            FitParam("recombination", transform="sigmoid")
+        with pytest.raises(ValueError, match="needs"):
+            FitParam("recombination", lo=1.0, hi=0.5, transform="sigmoid")
+
+    def test_unknown_transform_rejected(self):
+        with pytest.raises(ValueError, match="unknown transform"):
+            FitParam("recombination", transform="tanh")
+
+
+class TestFitSpec:
+    def test_empty_and_duplicate_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            FitSpec(params=())
+        with pytest.raises(ValueError, match="duplicate"):
+            FitSpec(params=(FitParam("recombination"),
+                            FitParam("recombination")))
+
+    def test_init_theta_prefers_explicit_init(self):
+        spec = FitSpec(params=(FitParam("recombination", init=0.5),
+                               FitParam("noise_rms_adc")))
+        vals = spec.values(spec.init_theta(CFG))
+        assert vals["recombination"] == pytest.approx(0.5)
+        assert vals["noise_rms_adc"] == pytest.approx(CFG.noise_rms_adc)
+
+    def test_true_theta_ignores_init(self):
+        spec = FitSpec(params=(FitParam("recombination", init=0.5),))
+        vals = spec.values(spec.true_theta(CFG))
+        assert vals["recombination"] == pytest.approx(CFG.recombination)
+
+    def test_apply_rebuilds_config(self):
+        spec = FitSpec(params=(FitParam("recombination"),
+                               FitParam("adc_baseline")))
+        cfg = spec.apply(CFG, jnp.asarray([0.6, 850.0]))
+        assert float(cfg.recombination) == pytest.approx(0.6)
+        assert float(cfg.adc_baseline) == pytest.approx(850.0)
+        # untouched fields keep their (Python-typed) values
+        assert cfg.num_wires == CFG.num_wires
+
+    def test_spec_from_names_bounds(self):
+        spec = spec_from_names(["noise_rms_adc"], CFG, rel_bounds=4.0)
+        (p,) = spec.params
+        assert p.resolved_transform == "sigmoid"
+        assert p.lo == pytest.approx(CFG.noise_rms_adc / 4.0)
+        assert p.hi == pytest.approx(CFG.noise_rms_adc * 4.0)
+        # a field currently at zero gets the unbounded identity transform
+        assert dataclasses.asdict(
+            spec_from_names(["electron_lifetime_us"], CFG).params[0]
+        )["transform"] is None
+
+
+# ---------------------------------------------------------------------------
+# fit_config / assert_differentiable_config
+# ---------------------------------------------------------------------------
+
+
+class TestFitConfig:
+    def test_enables_ste_and_relaxed(self):
+        fcfg = fit_config(CFG)
+        assert fcfg.digitize_ste
+        assert fcfg.rng_strategy == "relaxed"
+        assert_differentiable_config(fcfg)  # must not raise
+
+    def test_pool_rng_rejected(self):
+        cfg = dataclasses.replace(CFG, rng_strategy="pool")
+        with pytest.raises(ValueError, match="pool"):
+            fit_config(cfg)
+
+    def test_auto_and_pallas_strategies_fall_back(self):
+        cfg = dataclasses.replace(CFG, charge_grid_strategy="auto",
+                                  scatter_strategy="pallas")
+        fcfg = fit_config(cfg)
+        assert fcfg.charge_grid_strategy == "unfused"
+        assert fcfg.scatter_strategy == "xla"
+
+    def test_default_config_fails_audit(self):
+        with pytest.raises(ValueError, match="not differentiable"):
+            assert_differentiable_config(CFG)
+
+
+# ---------------------------------------------------------------------------
+# Physical-event packing
+# ---------------------------------------------------------------------------
+
+
+class TestPackPhysicalEvents:
+    def _events(self, sizes):
+        from repro.core.depo import generate_physical_depos
+
+        return [generate_physical_depos(jax.random.key(10 + i), CFG, n=n)
+                for i, n in enumerate(sizes)]
+
+    def test_ragged_pack_shapes(self):
+        batch = pack_physical_events(self._events([700, 300]))
+        assert batch.num_events == 2
+        assert batch.max_depos == 700  # max over events, no extra padding
+        np.testing.assert_array_equal(np.asarray(batch.n_depos),
+                                      [700, 300])
+        # padding rows carry zero charge
+        assert float(jnp.abs(batch.q[1, 300:]).max()) == 0.0
+
+    def test_pad_to_and_multiple(self):
+        batch = pack_physical_events(self._events([100]), pad_to=130,
+                                     pad_multiple=64)
+        assert batch.max_depos == 192
+
+    def test_empty_list_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            pack_physical_events([])
+
+    def test_padding_is_inert_through_the_graph(self):
+        """Extra q=0 rows contribute nothing: with the sampling stages off,
+        the padded event's ADC equals the unpadded run bit-for-bit (zero
+        charge -> zero patch -> zero scatter contribution).
+
+        With ``rng_strategy="counter"`` the *realization* does shift —
+        threefry pairs counter i with i + n/2 over the flattened (N, pw, pt)
+        draw, so the normals depend on the padded length. That is why fit
+        targets and the fit loss share ONE padded batch (same shapes, same
+        keys): the self-calibration contract never compares runs of
+        different padded lengths."""
+        (ev,) = self._events([256])
+        batch = pack_physical_events([ev], pad_to=320)
+        key = jax.random.key(21)
+        cfg = dataclasses.replace(CFG, rng_strategy="none")
+        run = jax.jit(build_sim_graph(cfg, None).run)
+        adc_plain = run(key, ev).adc
+        adc_padded = run(key, batch.event(0)).adc
+        np.testing.assert_array_equal(np.asarray(adc_plain),
+                                      np.asarray(adc_padded))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer drivers
+# ---------------------------------------------------------------------------
+
+_QSPEC = FitSpec(params=(FitParam("recombination"),
+                         FitParam("adc_baseline")))
+_QTARGET = jnp.asarray([0.7, -1.3])
+
+
+def _quadratic(theta):
+    return jnp.sum((theta - _QTARGET) ** 2)
+
+
+class TestRunFit:
+    def test_adam_converges_on_quadratic(self):
+        res = run_fit(_quadratic, _QSPEC, jnp.zeros(2), steps=300, lr=0.05)
+        np.testing.assert_allclose(np.asarray(res.theta),
+                                   np.asarray(_QTARGET), atol=1e-3)
+        assert res.loss < 1e-6
+        assert res.steps == 300 and len(res.history) == 300
+
+    def test_bfgs_converges_on_quadratic(self):
+        res = run_fit(_quadratic, _QSPEC, jnp.zeros(2), steps=50,
+                      optimizer="bfgs")
+        np.testing.assert_allclose(np.asarray(res.theta),
+                                   np.asarray(_QTARGET), atol=1e-4)
+        assert res.steps <= 50
+
+    def test_unknown_optimizer_rejected(self):
+        with pytest.raises(ValueError, match="unknown optimizer"):
+            run_fit(_quadratic, _QSPEC, jnp.zeros(2), optimizer="sgd")
+
+    def test_callback_fires_on_log_every(self):
+        seen = []
+        run_fit(_quadratic, _QSPEC, jnp.zeros(2), steps=10, log_every=4,
+                callback=lambda s, l, v: seen.append((s, sorted(v))))
+        assert [s for s, _ in seen] == [4, 8, 10]
+        assert seen[0][1] == ["adc_baseline", "recombination"]
+
+    def test_relative_errors(self):
+        res = run_fit(_quadratic, _QSPEC, jnp.zeros(2), steps=5)
+        errs = res.relative_errors({"recombination": 1.0})
+        assert set(errs) == {"recombination"}
+        assert errs["recombination"] >= 0.0
+
+
+class TestCalibrate:
+    def test_short_fit_moves_toward_truth(self):
+        """A deliberately short Adam run on one free parameter: the loss must
+        drop sharply and the recovered value must close most of the gap to
+        the truth (the full-convergence gate lives in launch/fit.py
+        --smoke)."""
+        cfg = dataclasses.replace(CFG, electrons_per_depo=150_000.0)
+        truth = cfg.noise_rms_adc
+        spec = FitSpec(params=(FitParam("noise_rms_adc", init=2.0 * truth,
+                                        lo=truth / 4.0, hi=truth * 4.0),))
+        targets = make_fit_targets(cfg, jax.random.key(31), num_events=1)
+        loss_fn = jax.jit(make_fit_loss(cfg, spec, targets))
+        l_init = float(loss_fn(spec.init_theta(cfg)))
+        res = calibrate(cfg, spec, targets, steps=60, lr=0.3)
+        assert res.loss < 0.5 * l_init
+        assert res.relative_errors({"noise_rms_adc": truth})[
+            "noise_rms_adc"] < 0.25
+
+
+class TestMakeFitLoss:
+    def test_decon_weight_requires_recon_targets(self):
+        spec = FitSpec(params=(FitParam("recombination"),))
+        targets = make_fit_targets(CFG, jax.random.key(1), num_events=1)
+        with pytest.raises(ValueError, match="recon=True"):
+            make_fit_loss(CFG, spec, targets, decon_weight=0.1)
+
+    def test_loss_is_scalar_and_finite(self):
+        spec = FitSpec(params=(FitParam("recombination"),))
+        targets = make_fit_targets(CFG, jax.random.key(2), num_events=2)
+        loss = jax.jit(make_fit_loss(CFG, spec, targets))
+        val = loss(spec.init_theta(CFG) + 0.1)
+        assert val.shape == ()
+        assert bool(jnp.isfinite(val))

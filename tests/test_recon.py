@@ -316,6 +316,7 @@ print("RESULTS:" + json.dumps(results))
 """
 
 
+@pytest.mark.subprocess
 def test_distributed_round_trip_matches_single_device():
     """shard_map recon (8 forced host devices, pencil-FFT deconvolve +
     per-shard hit finding) reproduces the single-device hit set exactly."""
