@@ -257,6 +257,13 @@ class LArTPCConfig:
     max_hits: int = 4096
     # per-wire ROI capacity before compaction into the global HitSet
     max_hits_per_wire: int = 8
+    # ---- fault tolerance (ISSUE 8): in-graph numeric sentinel ----
+    # True wraps every float-producing stage with a jit-cheap
+    # ``jnp.isfinite`` reduction, AND-ed into a ``finite_ok`` output flag
+    # (per event under vmap) so the streaming layer can count events whose
+    # pipeline went NaN/Inf mid-flight. Off (the default) adds NOTHING to
+    # the traced program — bit-identical output (docs/robustness.md)
+    check_finite: bool = False
 
 
 class PlaneSpec(NamedTuple):

@@ -209,6 +209,35 @@ def pack_events(events: Sequence[DepoSet], pad_to: Optional[int] = None,
     return EventBatch(n_depos=n_depos, **stacked)
 
 
+def screen_events(events, ids: Sequence[int], cfg: LArTPCConfig, *,
+                  pad_to: Optional[int] = None, batch: int = 0,
+                  health=None):
+    """Ingest validation gate: keep clean events, quarantine the rest.
+
+    Runs ``repro.core.validate.check_depos`` on every (event, id) pair and
+    returns ``(kept_events, kept_ids, dead_letters)`` — kept events preserve
+    their ids (and hence their ``fold_in`` keys), so their simulated ADCs
+    are bit-identical to a run that never saw the quarantined events.
+    ``pad_to`` enforces the padded-batch capacity (an event larger than the
+    pad target would crash ``pack_events`` mid-stream); ``health`` (a
+    ``RunHealth``) collects the counters when given.
+    """
+    from repro.core.validate import check_depos, dead_letter
+
+    kept_events, kept_ids, letters = [], [], []
+    for ev, depos in zip(ids, events):
+        reasons = check_depos(depos, cfg, max_depos=pad_to)
+        if reasons:
+            letters.append(dead_letter(ev, batch, reasons, depos))
+        else:
+            kept_events.append(depos)
+            kept_ids.append(ev)
+    if health is not None and letters:
+        health.quarantined += len(letters)
+        health.dead_letters.extend(letters)
+    return kept_events, kept_ids, letters
+
+
 def event_keys(key: jax.Array, event_ids: Sequence[int]) -> jax.Array:
     """Stacked per-event keys, (E,) — fold_in(key, ev) for each event id.
 

@@ -69,6 +69,10 @@ class SimOutput(NamedTuple):
     charge_grid: jax.Array  # S(t,x) after scatter-add
     decon: Optional[jax.Array] = None  # deconvolved charge estimate Ŝ(t,x)
     hits: Optional[Any] = None         # HitSet (repro.core.hitfind)
+    #: () bool — True when every float stage output was finite; populated
+    #: only when ``cfg.check_finite`` (None otherwise: an empty pytree
+    #: node, so the default graph's structure/output is untouched)
+    finite_ok: Optional[jax.Array] = None
 
 
 class SimState(NamedTuple):
@@ -88,6 +92,7 @@ class SimState(NamedTuple):
     adc: Optional[jax.Array] = None    # int16 after digitize
     decon: Optional[jax.Array] = None  # Ŝ(t,x) after deconvolve (recon)
     hits: Optional[Any] = None         # HitSet after hit_find (recon)
+    finite_ok: Optional[jax.Array] = None  # check_finite sentinel accumulator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,7 +153,7 @@ class SimGraph:
     def output(self, state: SimState) -> SimOutput:
         return SimOutput(adc=state.adc, signal=state.signal,
                          charge_grid=state.grid, decon=state.decon,
-                         hits=state.hits)
+                         hits=state.hits, finite_ok=state.finite_ok)
 
     def run_state(self, state: SimState) -> SimState:
         for stage in self.stages:
@@ -425,6 +430,41 @@ def hit_find_stage(cfg: LArTPCConfig,
     return Stage("hit_find", fn, op="hit_find")
 
 
+#: which SimState field each stage's finite sentinel inspects (stages that
+#: only produce integers — digitize — have nothing to check; hit_find's
+#: float leaves derive from decon, checked one stage earlier, but its
+#: charge/tick can still overflow so it is checked too)
+_FINITE_CHECK_FIELDS = {
+    "drift": "depos",
+    "charge_grid": "grid",
+    "convolve": "signal",
+    "noise": "signal",
+    "deconvolve": "decon",
+    "hit_find": "hits",
+}
+
+
+def _finite_checked(stage: Stage) -> Stage:
+    """Wrap a stage with the ``cfg.check_finite`` sentinel: after the stage
+    runs, AND ``all(isfinite(...))`` over the float leaves it wrote into the
+    state's ``finite_ok`` flag. One fused reduction per stage — jit-cheap —
+    and never a branch, so vmap/shard_map see the same program shape."""
+    field = _FINITE_CHECK_FIELDS.get(stage.name)
+    if field is None:
+        return stage
+
+    def fn(state: SimState) -> SimState:
+        state = stage.fn(state)
+        ok = (state.finite_ok if state.finite_ok is not None
+              else jnp.asarray(True))
+        for leaf in jax.tree.leaves(getattr(state, field)):
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+                ok = ok & jnp.all(jnp.isfinite(leaf))
+        return state._replace(finite_ok=ok)
+
+    return dataclasses.replace(stage, fn=fn)
+
+
 def build_sim_graph(cfg: LArTPCConfig, resp=None,
                     pool: Optional[jax.Array] = None, add_noise: bool = True,
                     overrides: Optional[Dict[str, Callable | Stage]] = None,
@@ -475,6 +515,11 @@ def build_sim_graph(cfg: LArTPCConfig, resp=None,
     if recon:
         stages.append(deconvolve_stage(cfg, resp, planes=planes))
         stages.append(hit_find_stage(cfg, planes=planes))
+    if cfg.check_finite:
+        # the numeric sentinel wraps the standard stages only; ``overrides``
+        # below replace whole (wrapped) stages, so a specialized executor
+        # owns its own checking if it wants any
+        stages = [_finite_checked(s) for s in stages]
     graph = SimGraph(stages=tuple(stages))
     if overrides:
         graph = graph.replace(**overrides)

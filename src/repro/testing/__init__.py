@@ -1,0 +1,6 @@
+"""Test/CI support code shipped with the package (fault injection)."""
+from repro.testing.faults import (FaultPlan, InjectedDispatchError,
+                                  InjectedOOM, corrupt_tune_cache)
+
+__all__ = ["FaultPlan", "InjectedDispatchError", "InjectedOOM",
+           "corrupt_tune_cache"]

@@ -23,11 +23,13 @@ per-architecture builds — but chosen by data, not by hand.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import json
 import os
 import time
+import uuid
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
@@ -36,6 +38,11 @@ from repro.tune import registry
 from repro.tune.registry import TuneContext
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
+
+#: cache record schema version. Bump on incompatible record changes: entries
+#: with a different (or missing) ``schema`` field are ignored per-entry —
+#: a stale or foreign record degrades to a cache miss, never a crash.
+SCHEMA_VERSION = 1
 
 #: op -> the config field that names its strategy
 OP_FIELDS: Dict[str, str] = {
@@ -68,33 +75,68 @@ def default_cache_path() -> str:
 
 
 class TuneCache:
-    """A {cache_key: decision-record} JSON file, loaded lazily, written on put."""
+    """A {cache_key: decision-record} JSON file, loaded lazily, written on put.
+
+    Robust to the failure modes a shared cache file actually sees
+    (docs/robustness.md):
+
+    * **Concurrent writers** — each ``put`` writes to a per-process temp name
+      (pid + random suffix) and atomically ``os.replace``s it in, so two
+      processes can never interleave bytes; and it *merges on write* (re-read
+      disk, overlay this process's own entries) so the last writer keeps the
+      other's decisions instead of clobbering them.
+    * **Corrupt files** — torn writes / garbage bytes / non-dict JSON degrade
+      to an empty cache (a re-tune), never a crash.
+    * **Foreign entries** — records without ``schema == SCHEMA_VERSION`` (or
+      that are not dicts at all) are dropped per-entry on read.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
         self._data: Optional[Dict[str, dict]] = None
+        #: entries written by THIS process — re-overlaid on every merge
+        self._local: Dict[str, dict] = {}
+
+    @staticmethod
+    def _valid(entry: object) -> bool:
+        return isinstance(entry, dict) and entry.get("schema") == SCHEMA_VERSION
+
+    def _read_disk(self) -> Dict[str, dict]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError, UnicodeDecodeError):
+            return {}
+        if not isinstance(raw, dict):
+            return {}
+        return {k: v for k, v in raw.items() if self._valid(v)}
 
     def _load(self) -> Dict[str, dict]:
         if self._data is None:
-            try:
-                with open(self.path) as f:
-                    self._data = json.load(f)
-            except (OSError, json.JSONDecodeError):
-                self._data = {}
+            self._data = self._read_disk()
         return self._data
 
     def get(self, key: str) -> Optional[dict]:
         return self._load().get(key)
 
     def put(self, key: str, record: dict) -> None:
-        data = self._load()
-        data[key] = record
+        record = dict(record, schema=SCHEMA_VERSION)
+        self._local[key] = record
+        # merge-on-write: a concurrent tuner may have landed entries since we
+        # loaded — keep theirs, overlay ours
+        data = self._read_disk()
+        data.update(self._local)
+        self._data = data
         os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-            f.write("\n")
-        os.replace(tmp, self.path)
+        tmp = f"{self.path}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=2, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        finally:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
 
 
 # ---------------------------------------------------------------------------
@@ -319,7 +361,7 @@ def _usable_hit(op: str, hit: Optional[dict], ctx: TuneContext) -> bool:
     carries (backend, device_kind, shape) but not config predicates like
     ``fluctuate``, so e.g. a ``fused_pallas`` winner tuned under a
     no-fluctuation config must not leak into a run that needs fluctuation."""
-    if hit is None:
+    if not isinstance(hit, dict):  # None, or a foreign non-record entry
         return False
     return hit.get("strategy") in registry.available_strategies(op, ctx)
 
