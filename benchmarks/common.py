@@ -129,6 +129,62 @@ def run_occupancy_board(prefix: str, *, fluctuate: bool,
              time_fn(scompact, iters=iters), occ_pad)
 
 
+def run_plane_occupancy_board(prefix: str, *, iters: int = 2) -> None:
+    """PER-PLANE active-tile occupancy of the 3-plane readout, plus the
+    plane-batched charge-grid candidates on the same stacked depo set.
+
+    The U/V projections smear the same track across different wire spans
+    than the collection plane, so the planes occupy different tile counts —
+    but the multi-plane compact kernel launches every plane at ONE shared
+    capacity (the max over planes, bucketed). This board records each
+    plane's occupancy next to the stacked kernels' cost, so a plane whose
+    occupancy blows up the shared cap is visible in the tuning record.
+    """
+    import functools
+
+    import jax
+
+    from repro.config import LArTPCConfig, plane_specs
+    from repro.core.depo import depo_patch_origin, generate_plane_depos
+    from repro.core.pipeline import charge_grid_multiplane_xla
+    from repro.kernels.fused_sim.ops import (
+        simulate_charge_grid_multiplane,
+        simulate_charge_grid_multiplane_compact)
+    from repro.kernels.scatter_add.ops import count_active_tiles, next_pow2
+
+    cfg = LArTPCConfig(num_wires=256, num_ticks=1024, num_depos=64,
+                       num_planes=3, fluctuate=False, response_wires=11,
+                       response_ticks=64)
+    tw, tt = 32, 128
+    n_tiles = (cfg.num_wires // tw) * (cfg.num_ticks // tt)
+    depos = generate_plane_depos(jax.random.key(5), cfg)
+    w0, t0 = depo_patch_origin(depos, cfg)
+    per_plane = []
+    for spec in plane_specs(cfg):
+        p = spec.index
+        n_act = int(count_active_tiles(
+            w0[p], t0[p], pw_pad=cfg.patch_wires, pt_pad=cfg.patch_ticks,
+            num_wires=cfg.num_wires, num_ticks=cfg.num_ticks, tw=tw, tt=tt))
+        per_plane.append(n_act)
+        emit(f"{prefix}occupancy3p_plane{p}_active", float(n_act) * 1e-6,
+             f"kind={spec.kind};n_tiles={n_tiles};unit=tiles")
+    cap = min(n_tiles, next_pow2(max(per_plane)))
+    occ = (f"n_active={'/'.join(map(str, per_plane))};n_cap={cap};"
+           f"n_tiles={n_tiles};planes=3;fluctuate=False")
+    k_max = 256
+    dense = functools.partial(simulate_charge_grid_multiplane, depos, cfg,
+                              tw=tw, tt=tt, k_max=k_max, keys=None)
+    compact = functools.partial(simulate_charge_grid_multiplane_compact,
+                                depos, cfg, tw=tw, tt=tt, k_max=k_max,
+                                keys=None)
+    emit(f"{prefix}occupancy3p_fused_dense", time_fn(dense, iters=iters), occ)
+    emit(f"{prefix}occupancy3p_fused_compact",
+         time_fn(compact, iters=iters), occ)
+    xla = jax.jit(lambda k, d: charge_grid_multiplane_xla(k, d, cfg))
+    emit(f"{prefix}occupancy3p_multiplane_xla",
+         time_fn(xla, jax.random.key(3), depos, iters=iters), occ)
+
+
 def diffuse_depos(cfg, n: int, seed: int = 0):
     """Depos spread uniformly over the whole readout plane.
 

@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import emit, run_occupancy_board, time_fn, write_json
+from benchmarks.common import (emit, run_occupancy_board,
+                               run_plane_occupancy_board, time_fn, write_json)
 from repro import tune
 from repro.config import get_config
 
@@ -41,6 +42,10 @@ def sweep_occupancy(iters: int = 2) -> None:
     scatter, fluctuation off) — see ``common.run_occupancy_board``."""
     run_occupancy_board("tune/", fluctuate=False, include_scatter=True,
                         iters=iters)
+    # per-plane occupancy of the 3-plane readout + the plane-batched
+    # charge-grid candidates (the stacked compact kernel shares one
+    # capacity across planes — the sweep shows what each plane contributes)
+    run_plane_occupancy_board("tune/", iters=iters)
 
 
 def main(full: bool = False) -> None:

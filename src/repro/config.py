@@ -231,6 +231,17 @@ class LArTPCConfig:
     # per-plane field-response type: "induction" (bipolar) | "collection"
     # (unipolar) — selects the plane's ``make_response`` kernel
     plane_types: Tuple[str, ...] = ("induction", "induction", "collection")
+    # how the plane axis is dispatched when ``num_planes > 1`` (ISSUE 9):
+    #   loop    : the original static Python loop — P charge-grid/convolve/
+    #             noise programs and (distributed) P collectives per step
+    #   stacked : one batched dispatch over a real (P, ...) array axis —
+    #             plane-vmapped charge grid, one batched rfft2 with stacked
+    #             per-plane response spectra, one batched noise draw, and a
+    #             single reduce-scatter / all_to_all in the distributed
+    #             executor. Bit-identical to "loop" (same per-plane
+    #             fold_in subkeys)
+    #   auto    : "stacked" for multi-plane configs, "loop" otherwise
+    plane_batching: str = "auto"
     # ---- sim -> recon loop (ISSUE 6): deconvolution + hit finding ----
     # frequency-domain filter applied with the inverse response:
     #   wiener   : conj(R) / (|R|^2 + lambda * max|R|^2) — optimal-ish
@@ -248,8 +259,10 @@ class LArTPCConfig:
     # auto: tuning cache / backend default (plane-keyed, like fft_strategy)
     deconv_strategy: str = "rfft2"
     # scan: vectorized lax.scan threshold ROI finder (XLA); pallas: per-wire
-    # Pallas scan kernel; auto: resolve via the strategy registry
-    hitfind_strategy: str = "scan"
+    # Pallas scan kernel; auto (default): resolve via the strategy registry /
+    # tuning cache — both strategies share one ROI-scan body, so the choice
+    # is a pure perf decision (bit-identical outputs either way)
+    hitfind_strategy: str = "auto"
     # hit threshold on the deconvolved charge, electrons per pixel; runs of
     # consecutive above-threshold ticks on one wire become hits
     hit_threshold: float = 500.0

@@ -38,7 +38,8 @@ from repro.core.depo import DepoSet
 from repro.core.noise import noise_spectrum, sample_noise_rows
 from repro.core.rasterize import rasterize
 from repro.core.scatter import scatter_add
-from repro.core.stages import SimState, build_sim_graph
+from repro.core.stages import (SimState, build_sim_graph,
+                               resolve_plane_batching)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -98,11 +99,19 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
     axes = tuple(axes)
     specs = plane_specs(cfg)
     multi = cfg.num_planes > 1
-    if multi and scatter_reduction == "halo":
+    n_planes = len(specs)
+    # "stacked" folds the plane axis into the shard_map body as a real
+    # array axis: ONE reduce-scatter chain, ONE pencil-FFT all_to_all
+    # chain, and one halo ppermute pair per step regardless of P (the
+    # "loop" mode preserves the per-plane collectives)
+    stacked = multi and resolve_plane_batching(cfg) == "stacked"
+    if multi and scatter_reduction == "halo" and not stacked:
         raise ValueError(
-            "scatter_reduction='halo' is single-plane only: depos are "
-            "pre-binned by ONE wire coordinate, but every plane projects "
-            "its own; use 'psum_scatter' for multi-plane configs")
+            "multi-plane scatter_reduction='halo' requires "
+            "plane_batching='stacked': the loop path pre-bins depos by ONE "
+            "wire coordinate, but every plane projects its own; the "
+            "stacked path takes a (num_planes, N) DepoSet pre-binned per "
+            "plane-projected wire (bin_depos_by_wire)")
     if multi:
         resps = tuple(resp)
         if len(resps) != len(specs):
@@ -140,53 +149,86 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
     # axis and digitize over the grid, so both shard freely, including the
     # multi-plane per-plane projection.
 
-    def _charge_grid_one(depos, base_key):
-        """One plane's depo shard -> its wire-sharded grid piece."""
+    def _rasterize_fluct(depos, base_key):
+        """One plane's depo shard -> fluctuated patches (no collectives)."""
         patches, w0, t0 = rasterize(depos, cfg)
         if cfg.fluctuate and cfg.rng_strategy != "none":
             kf = jax.random.fold_in(base_key, _flat_index(axes, mesh))
             patches = fl.fluctuate_counter(kf, patches, depos.charge)
+        return patches, w0, t0
 
-        # ---- scatter-add + reduction to wire-sharded grid ----
+    def _local_strip(patches, w0, t0):
+        """Local halo-margined strip for one plane (no collectives)."""
+        me = jax.lax.axis_index(halo_axis)
+        lo = me * w_strip
+        # local strip with halo margin on both sides (depos pre-binned
+        # so every patch lands within [lo-halo, lo+w_strip+halo))
+        return _scatter_local_strip(patches, w0, t0, lo, w_strip, halo,
+                                    t_len, cfg)
+
+    def _reduce_strips(strip):
+        """Halo collectives for (..., strip_w, T) strips: one psum over the
+        non-halo axes, one ppermute ring exchange, one sub-shard slice —
+        the SAME collective count whether a plane axis leads or not."""
+        for a in axes[1:]:
+            strip = jax.lax.psum(strip, a)
+        strip_own = _halo_exchange(strip, w_strip, halo, halo_axis)
+        if w_shard == w_strip:
+            return strip_own
+        # slice my (finer) w_shard piece out of the strip for the FFT
+        sub = _flat_index(axes[1:], mesh)
+        start = (0,) * (strip_own.ndim - 2) + (sub * w_shard, 0)
+        sizes = strip_own.shape[:-2] + (w_shard, t_len)
+        return jax.lax.dynamic_slice(strip_own, start, sizes)
+
+    def _reduce_partials(partial):
+        """Reduce-scatter the wire axis (axis -2) of (..., W_pad, T)
+        partials across every shard: one psum_scatter per mesh axis, the
+        SAME collective count whether a plane axis leads or not."""
+        lead = partial.shape[:-2]
+        for a in axes:
+            na = mesh.shape[a]
+            partial = jnp.moveaxis(
+                partial.reshape(*lead, na, partial.shape[-2] // na, t_len),
+                -3, 0)
+            partial = jax.lax.psum_scatter(
+                partial, a, scatter_dimension=0, tiled=False)
+        return partial
+
+    def _charge_grid_one(depos, base_key):
+        """One plane's depo shard -> its wire-sharded grid piece."""
+        patches, w0, t0 = _rasterize_fluct(depos, base_key)
         if scatter_reduction == "halo":
-            me = jax.lax.axis_index(halo_axis)
-            lo = me * w_strip
-            # local strip with halo margin on both sides (depos pre-binned
-            # so every patch lands within [lo-halo, lo+w_strip+halo))
-            strip = _scatter_local_strip(patches, w0, t0, lo, w_strip, halo,
-                                         t_len, cfg)
-            # partials from the non-halo axes hold the same strip: psum
-            for a in axes[1:]:
-                strip = jax.lax.psum(strip, a)
-            strip_own = _halo_exchange(strip, w_strip, halo, halo_axis)
-            # slice my (finer) w_shard piece out of the strip for the FFT
-            if w_shard != w_strip:
-                sub = _flat_index(axes[1:], mesh)
-                grid_local = jax.lax.dynamic_slice(
-                    strip_own, (sub * w_shard, 0), (w_shard, t_len))
-            else:
-                grid_local = strip_own
-        else:
-            partial = _scatter_partial_full(patches, w0, t0, w_pad, t_len, cfg)
-            # reduce-scatter the wire axis across every shard
-            grid_local = partial
-            for a in axes:
-                grid_local = grid_local.reshape(
-                    mesh.shape[a], grid_local.shape[0] // mesh.shape[a], t_len)
-                grid_local = jax.lax.psum_scatter(
-                    grid_local, a, scatter_dimension=0, tiled=False)
-        return grid_local
+            return _reduce_strips(_local_strip(patches, w0, t0))
+        return _reduce_partials(
+            _scatter_partial_full(patches, w0, t0, w_pad, t_len, cfg))
 
     def dist_charge_grid(state: SimState) -> SimState:
         if not multi:
             return state._replace(
                 grid=_charge_grid_one(state.depos, state.key))
-        grids = []
+        # per-plane rasterize + fluctuate (local work, plane-folded keys,
+        # bit-identical to the loop); ONLY the collectives batch over P
+        locals_ = []
         for i, spec in enumerate(specs):
             depos_p = jax.tree.map(lambda x, i=i: x[i], state.depos)
             base = jax.random.fold_in(state.key, spec.index)
-            grids.append(_charge_grid_one(depos_p, base))
-        return state._replace(grid=jnp.stack(grids))
+            locals_.append(_rasterize_fluct(depos_p, base))
+        if not stacked:
+            return state._replace(grid=jnp.stack([
+                (_reduce_strips(_local_strip(p, w0, t0))
+                 if scatter_reduction == "halo" else
+                 _reduce_partials(_scatter_partial_full(p, w0, t0, w_pad,
+                                                        t_len, cfg)))
+                for p, w0, t0 in locals_]))
+        if scatter_reduction == "halo":
+            strip = jnp.stack([_local_strip(p, w0, t0)
+                               for p, w0, t0 in locals_])
+            return state._replace(grid=_reduce_strips(strip))
+        partial = jnp.stack([
+            _scatter_partial_full(p, w0, t0, w_pad, t_len, cfg)
+            for p, w0, t0 in locals_])
+        return state._replace(grid=_reduce_partials(partial))
 
     def _convolve_one(grid_local, rfreq):
         # ---- pencil FFT: tick rFFT local -> transpose -> wire FFT ----
@@ -213,9 +255,45 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
         freq_t = jnp.swapaxes(blk, 0, 1).reshape(w_shard, f_pad)[:, :nfreq]
         return jnp.fft.irfft(freq_t, n=t_len, axis=-1).real.astype(jnp.float32)
 
+    def _convolve_planes(grid_local, rfreq_pad):
+        """All P planes through ONE pencil-FFT all_to_all chain.
+
+        grid_local (P, w_shard, t_len); rfreq_pad (P, w_pad, f_pad) —
+        plane p's output bit-identical to ``_convolve_one`` on plane p
+        (the all_to_all is pure data movement, the FFTs batch per row).
+        """
+        freq_t = jnp.fft.rfft(grid_local, axis=-1)      # (P, w_shard, nfreq)
+        freq_t = jnp.pad(freq_t, ((0, 0), (0, 0), (0, f_pad - nfreq)))
+        blk = freq_t.reshape(n_planes, w_shard, nshards, f_shard)
+        blk = jnp.moveaxis(blk, 2, 0)            # (nshards, P, w_shard, f_sh)
+        blk = _all_to_all_chain(blk, axes, mesh)
+        cols = jnp.swapaxes(blk, 0, 1).reshape(n_planes, w_pad, f_shard)
+        freq_wt = jnp.fft.fft(cols, axis=-2)             # wire-axis FFT
+
+        me = _flat_index(axes, mesh)
+        rcols = jax.lax.dynamic_slice(
+            rfreq_pad, (0, 0, me * f_shard), (n_planes, w_pad, f_shard))
+        out_wt = freq_wt * rcols
+
+        cols = jnp.fft.ifft(out_wt, axis=-2)             # (P, w_pad, f_shard)
+        blk = jnp.swapaxes(cols.reshape(n_planes, nshards, w_shard, f_shard),
+                           0, 1)                 # (nshards, P, w_shard, f_sh)
+        blk = _all_to_all_chain(blk, axes, mesh)
+        freq_t = jnp.moveaxis(blk, 0, 2).reshape(
+            n_planes, w_shard, f_pad)[..., :nfreq]
+        return jnp.fft.irfft(freq_t, n=t_len, axis=-1).real.astype(
+            jnp.float32)
+
+    if multi and stacked:
+        rfreq_pad = jnp.stack([
+            jnp.pad(rf, ((0, 0), (0, f_pad - nfreq))) for rf in rfreqs])
+
     def dist_convolve(state: SimState) -> SimState:
         if not multi:
             return state._replace(signal=_convolve_one(state.grid, rfreqs[0]))
+        if stacked:
+            return state._replace(
+                signal=_convolve_planes(state.grid, rfreq_pad))
         return state._replace(signal=jnp.stack([
             _convolve_one(state.grid[i], rfreqs[i])
             for i in range(len(rfreqs))]))
@@ -230,6 +308,12 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
         kn = jax.random.fold_in(state.key, 77 + _flat_index(axes, mesh))
         if not multi:
             noise = _noise_one(kn)
+        elif stacked:
+            # ONE batched spectrum draw over the stacked per-plane subkeys
+            # (same fold_in derivation as the loop, vmapped)
+            idx = jnp.asarray([s.index for s in specs], jnp.uint32)
+            kns = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(kn, idx)
+            noise = jax.vmap(_noise_one)(kns)
         else:
             noise = jnp.stack([
                 _noise_one(jax.random.fold_in(kn, spec.index))
@@ -256,10 +340,18 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
             # reuse the forward pencil-FFT chain verbatim
             return _convolve_one(measured_signal(adc_local, cfg), gfreq)
 
+        if multi and stacked:
+            gfreq_pad = jnp.stack([
+                jnp.pad(g, ((0, 0), (0, f_pad - nfreq))) for g in gfreqs])
+
         def dist_deconvolve(state: SimState) -> SimState:
             if not multi:
                 return state._replace(
                     decon=_deconv_one(state.adc, gfreqs[0]))
+            if stacked:
+                # the inverse filter rides the same single-shot pencil chain
+                return state._replace(decon=_convolve_planes(
+                    measured_signal(state.adc, cfg), gfreq_pad))
             return state._replace(decon=jnp.stack([
                 _deconv_one(state.adc[i], gfreqs[i])
                 for i in range(len(gfreqs))]))
@@ -298,11 +390,17 @@ def make_distributed_sim(mesh: Mesh, cfg: LArTPCConfig, resp,
             return out.adc
         return out.adc, out.decon, out.hits
 
+    # multi-plane halo takes a pre-drifted, per-plane-binned (P, N) DepoSet:
+    # shard the depo axis, replicate the plane axis. Everything else takes
+    # 1-D depo leaves (physical depos for multi-plane psum_scatter; the
+    # in-graph drift stage projects them per plane).
+    depo_spec = (P(None, axes) if multi and scatter_reduction == "halo"
+                 else P(axes))
     fn = shard_map(
         local_run, mesh=mesh,
         # the depo spec is a pytree prefix: every leaf of the depos arg
         # (DepoSet or PhysicalDepoSet) shards its depo axis over `axes`
-        in_specs=(P(), P(axes)),
+        in_specs=(P(), depo_spec),
         # the HitSet spec is a prefix too: every hit leaf concatenates its
         # leading (capacity / plane) axis over the shard group
         out_specs=(grid_spec if not recon else
@@ -385,45 +483,65 @@ def _scatter_local_strip(patches, w0, t0, lo, w_shard, halo, t_len,
 def _halo_exchange(strip, w_shard, halo, axis: str):
     """Add my halo overhangs into my neighbours' strips (ring ppermute).
 
-    strip: (w_shard + 2*halo, T); returns the owned (w_shard, T) region.
+    strip: (..., w_shard + 2*halo, T) — the wire axis is axis -2, so a
+    stacked plane axis rides along through ONE ppermute pair; returns the
+    owned (..., w_shard, T) region.
     """
-    lo_halo = strip[:halo]            # belongs to left neighbour
-    hi_halo = strip[-halo:]           # belongs to right neighbour
+    lo_halo = strip[..., :halo, :]    # belongs to left neighbour
+    hi_halo = strip[..., -halo:, :]   # belongs to right neighbour
     n = jax.lax.psum(1, axis)
     right = [(i, (i + 1) % n) for i in range(n)]
     left = [(i, (i - 1) % n) for i in range(n)]
     from_left = jax.lax.ppermute(hi_halo, axis, right)   # left nbr's overhang
     from_right = jax.lax.ppermute(lo_halo, axis, left)   # right nbr's overhang
-    own = strip[halo:halo + w_shard]
-    own = own.at[:halo].add(from_left)
-    own = own.at[-halo:].add(from_right)
+    own = strip[..., halo:halo + w_shard, :]
+    own = own.at[..., :halo, :].add(from_left)
+    own = own.at[..., -halo:, :].add(from_right)
     return own
 
 
 def bin_depos_by_wire(depos: DepoSet, n_strips: int, w_pad: int) -> DepoSet:
     """Host-side pre-binning for the halo strategy: sort depos by wire and
     pad each strip's bucket to equal count (zero-charge filler), so strip i
-    of the first mesh axis receives exactly the depos that touch it."""
+    of the first mesh axis receives exactly the depos that touch it.
+
+    Also accepts a multi-plane ``DepoSet`` with (P, N) leaves: each plane's
+    row is binned by ITS OWN projected wire coordinate, and every plane
+    shares one bucket capacity (the max over plane x strip) so strip s
+    occupies the same column range in every plane — a single depo-axis
+    shard then carries strip s of ALL planes.
+    """
     import numpy as np
 
-    wire = np.asarray(depos.wire)
-    strip = np.clip((wire // (w_pad // n_strips)).astype(np.int64), 0,
-                    n_strips - 1)
-    buckets = [np.nonzero(strip == s)[0] for s in range(n_strips)]
-    cap = max(1, max(len(b) for b in buckets))
+    wires = np.asarray(depos.wire)
+    multi = wires.ndim == 2
+    wires = np.atleast_2d(wires)
+    strip_w = w_pad // n_strips
+    plane_buckets = []
+    cap = 1
+    for wrow in wires:
+        strip = np.clip((wrow // strip_w).astype(np.int64), 0, n_strips - 1)
+        buckets = [np.nonzero(strip == s)[0] for s in range(n_strips)]
+        cap = max(cap, max(len(b) for b in buckets))
+        plane_buckets.append(buckets)
     n_out = cap * n_strips
-    idx = np.zeros(n_out, np.int64)
-    valid = np.zeros(n_out, bool)
-    for s, b in enumerate(buckets):
-        idx[s * cap:s * cap + len(b)] = b
-        valid[s * cap:s * cap + len(b)] = True
-    center = np.array([(s * (w_pad // n_strips) + w_pad // n_strips // 2)
+    rows = []
+    for buckets in plane_buckets:
+        idx = np.zeros(n_out, np.int64)
+        valid = np.zeros(n_out, bool)
+        for s, b in enumerate(buckets):
+            idx[s * cap:s * cap + len(b)] = b
+            valid[s * cap:s * cap + len(b)] = True
+        rows.append((idx, valid))
+    center = np.array([(s * strip_w + strip_w // 2)
                        for s in range(n_strips)], np.float32)
     fill_wire = np.repeat(center, cap)
 
     def take(x, fill):
-        arr = np.asarray(x)[idx]
-        return jnp.asarray(np.where(valid, arr, fill).astype(np.float32))
+        arr = np.atleast_2d(np.asarray(x))
+        out = np.stack([np.where(valid, arr[p][idx], fill).astype(np.float32)
+                        for p, (idx, valid) in enumerate(rows)])
+        return jnp.asarray(out if multi else out[0])
 
     return DepoSet(
         wire=take(depos.wire, fill_wire),
@@ -445,20 +563,26 @@ def shard_depos(depos, mesh: Mesh, axes=("data", "model")):
     nshards = 1
     for a in axes:
         nshards *= mesh.shape[a]
-    n = depos.n
+    # multi-plane halo inputs carry (P, N) leaves: pad/shard the LAST
+    # (depo) axis only and replicate the plane axis
+    planed = isinstance(depos, DepoSet) and depos.wire.ndim == 2
+    n = depos.wire.shape[-1] if planed else depos.n
     n_pad = _round_up(n, nshards)
     pad = n_pad - n
 
     def padf(x):
+        if planed:
+            return jnp.pad(x, ((0, 0), (0, pad)))
         return jnp.pad(x, (0, pad))
 
     padded = type(depos)(*(padf(x) for x in depos))
     if isinstance(depos, DepoSet):
         # zero-charge padding; positive sigmas avoid 0/0 in Gaussian edges
-        padded = padded._replace(charge=padded.charge.at[n:].set(0.0),
-                                 sigma_w=padded.sigma_w.at[n:].set(1.0),
-                                 sigma_t=padded.sigma_t.at[n:].set(1.0))
+        padded = padded._replace(charge=padded.charge.at[..., n:].set(0.0),
+                                 sigma_w=padded.sigma_w.at[..., n:].set(1.0),
+                                 sigma_t=padded.sigma_t.at[..., n:].set(1.0))
     # physical depos pad with zeros: q=0 is inert, and the drift stage's
     # sigma floors keep zero-drift-time widths positive
-    sh = NamedSharding(mesh, P(tuple(axes)))
+    sh = NamedSharding(mesh, P(None, tuple(axes)) if planed
+                       else P(tuple(axes)))
     return type(depos)(*(jax.device_put(x, sh) for x in padded))

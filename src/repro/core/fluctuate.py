@@ -161,3 +161,27 @@ def counter_normals(seed0: jax.Array, seed1: jax.Array, stream: jax.Array,
     b2 = hash_u32(base ^ hash_u32(two * counters + jnp.uint32(1)))
     # 1 - u keeps the log argument in (0, 1]; box_muller clamps the rest
     return box_muller(1.0 - uniform_from_bits(b1), uniform_from_bits(b2))
+
+
+def counter_normals_erfinv(seed0: jax.Array, seed1: jax.Array,
+                           stream: jax.Array, counters: jax.Array) -> jax.Array:
+    """``counter_normals`` with ONE hash per draw and the erfinv transform.
+
+    Box–Muller burns two hash chains plus a log/sqrt/cos per normal; the
+    inverse-CDF route needs one hash and one erfinv — the same
+    ``sqrt(2)·erfinv(2u−1)`` transform ``jax.random.normal`` applies to its
+    threefry uniforms, so the output distribution is identical to the
+    library draw. ~2x cheaper per element on CPU; used by the
+    plane-flattened XLA charge-grid strategy where the RNG is the hot loop.
+    Same (seed, stream, counter) contract as ``counter_normals`` but a
+    DIFFERENT bit stream — strategies using it pin their own goldens.
+    """
+    base = hash_u32(seed1 ^ stream) + seed0.astype(jnp.uint32)
+    bits = hash_u32(base ^ hash_u32(counters))
+    u = uniform_from_bits(bits)  # [0, 1)
+    # clamp 2u-1 away from -1 exactly as jax.random.normal's minval does,
+    # so u == 0 maps to a finite (extreme) draw instead of -inf
+    import numpy as np
+    lo = np.nextafter(np.float32(-1.0), np.float32(0.0))
+    return jnp.float32(np.sqrt(2.0)) * jax.scipy.special.erfinv(
+        jnp.maximum(2.0 * u - 1.0, lo))

@@ -132,6 +132,138 @@ def charge_grid_fused_compact(key: jax.Array, depos: DepoSet,
                                         key=_fused_key(key, cfg))
 
 
+def _fused_mp_viable(ctx) -> bool:
+    # the multi-plane fused kernels only make sense with a plane axis to
+    # batch over; fluctuation constraints match the single-plane fused
+    # kernels (in-kernel counter RNG), and off-TPU the interpreter budget
+    # scales with the number of planes it rasterizes per launch
+    cfg = ctx.cfg
+    if cfg is None or cfg.num_planes < 2:
+        return False
+    if cfg.fluctuate and cfg.rng_strategy in ("pool", "relaxed"):
+        return False
+    if ctx.backend == "tpu":
+        return True
+    cells = (ctx.shape.get("num_wires", 0) * ctx.shape.get("num_ticks", 0)
+             * cfg.num_planes)
+    return cells <= (1 << 21)
+
+
+def _plane_grid_keys(key: jax.Array, cfg: LArTPCConfig):
+    """Stacked per-plane in-kernel RNG subkeys ``fold_in(key, p)``, or None
+    when the config wants no fluctuation (pool/relaxed streams rejected by
+    ``_fused_key``, same as the single-plane fused strategies)."""
+    from repro.config import plane_specs
+
+    if _fused_key(key, cfg) is None:
+        return None
+    idx = jnp.asarray([s.index for s in plane_specs(cfg)], jnp.uint32)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, idx)
+
+
+def _require_plane_axis(depos: DepoSet, cfg: LArTPCConfig) -> None:
+    if depos.wire.ndim < 2 or depos.wire.shape[0] != cfg.num_planes:
+        raise ValueError(
+            "multi-plane charge_grid strategies take the FULL stacked "
+            f"(num_planes={cfg.num_planes}, N) depos of one event (got "
+            f"shape {depos.wire.shape}); they are dispatched by the "
+            "stacked plane-batching path, not per plane")
+
+
+@register_strategy("charge_grid", "fused_pallas_multiplane",
+                   available=_fused_mp_viable,
+                   note="one fused kernel rasterizes ALL planes per launch",
+                   differentiable=False)
+def charge_grid_fused_multiplane(key: jax.Array, depos: DepoSet,
+                                 cfg: LArTPCConfig,
+                                 pool: Optional[jax.Array] = None
+                                 ) -> jax.Array:
+    from repro.kernels.fused_sim.ops import simulate_charge_grid_multiplane
+
+    del pool
+    _require_plane_axis(depos, cfg)
+    return simulate_charge_grid_multiplane(depos, cfg,
+                                           keys=_plane_grid_keys(key, cfg))
+
+
+@register_strategy("charge_grid", "fused_pallas_multiplane_compact",
+                   available=_fused_mp_viable,
+                   note="multi-plane fused kernel over occupied tiles only",
+                   differentiable=False)
+def charge_grid_fused_multiplane_compact(key: jax.Array, depos: DepoSet,
+                                         cfg: LArTPCConfig,
+                                         pool: Optional[jax.Array] = None
+                                         ) -> jax.Array:
+    from repro.kernels.fused_sim.ops import (
+        simulate_charge_grid_multiplane_compact)
+
+    del pool
+    _require_plane_axis(depos, cfg)
+    return simulate_charge_grid_multiplane_compact(
+        depos, cfg, keys=_plane_grid_keys(key, cfg))
+
+
+def _mp_xla_viable(ctx) -> bool:
+    # plane-flattened XLA chain: needs a plane axis to amortize, and its
+    # fluctuation randomness is the fused kernels' counter hash, which (like
+    # them) cannot reproduce the pre-computed pool/relaxed streams. No cell
+    # cap — plain XLA scales to production grids on every backend.
+    cfg = ctx.cfg
+    if cfg is None or cfg.num_planes < 2:
+        return False
+    return not (cfg.fluctuate and cfg.rng_strategy in ("pool", "relaxed"))
+
+
+@register_strategy("charge_grid", "multiplane_xla", available=_mp_xla_viable,
+                   note="plane-flattened XLA chain; counter-hash fluctuation",
+                   differentiable=False)
+def charge_grid_multiplane_xla(key: jax.Array, depos: DepoSet,
+                               cfg: LArTPCConfig,
+                               pool: Optional[jax.Array] = None) -> jax.Array:
+    """All planes as ONE flat depo batch: rasterize (P*N) patches, draw
+    counter-hash fluctuations, and land them with a single window scatter
+    into a plane-major (P*W, T) grid.
+
+    The plane axis never becomes a Python loop or a vmap: every stage sees
+    one batch, so per-dispatch overhead and the RNG cost are paid once. The
+    fluctuation draws use the fused kernels' stateless counter hash (seeded
+    per plane from ``fold_in(key, plane)``, streamed per depo, countered per
+    patch pixel) instead of threefry — statistically interchangeable, but a
+    different bit stream than ``unfused``, so it carries its own pinned
+    goldens.
+    """
+    import dataclasses
+
+    del pool  # counter-hash RNG; the pool strategy is rejected above
+    _require_plane_axis(depos, cfg)
+    n_planes, n = depos.wire.shape[0], depos.wire.shape[-1]
+    flat = jax.tree.map(
+        lambda x: x.reshape((n_planes * n,) + x.shape[2:]), depos)
+    patches, w0, t0 = rasterize(flat, cfg)
+    keys = _plane_grid_keys(key, cfg)
+    if keys is not None:
+        seeds = jax.random.key_data(keys).astype(jnp.uint32)  # (P, 2)
+        s0 = jnp.repeat(seeds[:, 0], n)[:, None, None]
+        s1 = jnp.repeat(seeds[:, 1], n)[:, None, None]
+        # per-depo stream (same odd constant as the fused kernel's depo
+        # stream), per-patch-pixel counter
+        d_id = jnp.tile(jnp.arange(n, dtype=jnp.uint32), n_planes)
+        stream = (d_id * jnp.uint32(0x9E3779B9))[:, None, None]
+        pw, pt = patches.shape[1], patches.shape[2]
+        pix = (jnp.arange(pw, dtype=jnp.uint32)[:, None] * jnp.uint32(pt)
+               + jnp.arange(pt, dtype=jnp.uint32)[None, :])[None]
+        normals = fl.counter_normals_erfinv(s0, s1, stream, pix)
+        patches = fl.binomial_normal_approx(
+            patches, flat.charge, normals.astype(patches.dtype))
+    # plane-major wire offsets turn P scatters into ONE window scatter over
+    # a (P*W, T) grid
+    off = jnp.repeat(
+        jnp.arange(n_planes, dtype=w0.dtype) * cfg.num_wires, n)
+    tall = dataclasses.replace(cfg, num_wires=n_planes * cfg.num_wires)
+    grid = scatter_add(patches, w0 + off, t0, tall, strategy="xla")
+    return grid.reshape(n_planes, cfg.num_wires, cfg.num_ticks)
+
+
 set_default("charge_grid", "unfused")
 
 

@@ -213,6 +213,40 @@ class SimGraph:
 # ---------------------------------------------------------------------------
 
 
+#: charge_grid strategies that rasterize ALL planes in one kernel launch —
+#: they receive the unsplit charge-grid subkey plus the full (P, N) depos
+#: and fold the per-plane ``fold_in(kf, index)`` subkeys internally, so
+#: their output is bit-identical to the per-plane loop
+MULTIPLANE_CHARGE_GRID = ("fused_pallas_multiplane",
+                          "fused_pallas_multiplane_compact",
+                          "multiplane_xla")
+#: charge_grid strategies safe to vmap over the plane axis (pure-XLA
+#: rasterize/fluctuate/scatter chains). The single-plane Pallas kernels are
+#: excluded — their multi-plane form is the dedicated strategies above —
+#: so anything else falls back to the per-plane loop.
+PLANE_VMAP_CHARGE_GRID = ("unfused", "unfused_bf16")
+
+
+def resolve_plane_batching(cfg: LArTPCConfig) -> str:
+    """Resolve ``cfg.plane_batching`` to a concrete "loop" | "stacked"."""
+    mode = cfg.plane_batching
+    if mode not in ("auto", "loop", "stacked"):
+        raise ValueError(f"unknown plane_batching {mode!r}; expected 'auto', "
+                         "'loop' or 'stacked'")
+    if mode == "auto":
+        return "stacked" if cfg.num_planes > 1 else "loop"
+    return mode
+
+
+def plane_fold_keys(key: jax.Array, specs) -> jax.Array:
+    """Stacked per-plane subkeys ``fold_in(key, spec.index)``.
+
+    The vmapped form of the loop's per-plane fold — bit-identical per row
+    (same derivation as ``batch.event_keys`` uses for the event axis)."""
+    idx = jnp.asarray([s.index for s in specs], dtype=jnp.uint32)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, idx)
+
+
 def _selected_specs(cfg: LArTPCConfig, planes: Optional[Tuple[int, ...]]):
     specs = plane_specs(cfg)
     if planes is None:
@@ -307,24 +341,50 @@ def charge_grid_stage(cfg: LArTPCConfig,
     """depos -> S(t,x): rasterize + fluctuate + scatter-add (or the fused
     kernel), dispatched through the ``charge_grid`` strategy registry.
 
-    Multi-plane: one dispatch per plane over the depos' plane axis, each
-    with a plane-folded subkey (``fold_in(kf, plane_index)``) so electron
-    fluctuations are independent per plane; grids stack to (P, W, T).
+    Multi-plane: each plane draws from a plane-folded subkey
+    (``fold_in(kf, plane_index)``) so electron fluctuations are independent
+    per plane; grids stack to (P, W, T). ``plane_batching="loop"`` runs one
+    dispatch per plane (the original static Python loop); "stacked" runs the
+    plane axis as ONE batched dispatch — a dedicated multi-plane kernel
+    strategy when resolved, otherwise a plane vmap of the XLA chain — with
+    bit-identical output (same per-plane subkeys, same per-plane math).
     (The paper-faithful ``pool`` stream reuses the one pool per plane,
     matching its fixed-pool design across events.)"""
     specs = _selected_specs(cfg, planes)
     multi = cfg.num_planes > 1
+    stacked = multi and resolve_plane_batching(cfg) == "stacked"
 
-    def fn(state: SimState) -> SimState:
-        if not multi:
-            return state._replace(grid=compute_charge_grid(
-                state.kf, state.depos, cfg, pool=pool))
+    def loop_fn(state: SimState) -> SimState:
         grids = []
         for i, spec in enumerate(specs):
             kf = jax.random.fold_in(state.kf, spec.index)
             depos_p = jax.tree.map(lambda x, i=i: x[i], state.depos)
             grids.append(compute_charge_grid(kf, depos_p, cfg, pool=pool))
         return state._replace(grid=jnp.stack(grids))
+
+    def fn(state: SimState) -> SimState:
+        if not multi:
+            return state._replace(grid=compute_charge_grid(
+                state.kf, state.depos, cfg, pool=pool))
+        if not stacked:
+            return loop_fn(state)
+        from repro.tune import autotune, registry
+
+        strategy = cfg.charge_grid_strategy
+        if strategy == "auto":
+            strategy = autotune.resolve("charge_grid", cfg).strategy
+        if (strategy in MULTIPLANE_CHARGE_GRID
+                and len(specs) == cfg.num_planes):
+            # one kernel launch rasterizes every plane; it folds the
+            # per-plane subkeys from the unsplit kf internally
+            return state._replace(grid=registry.get_strategy(
+                "charge_grid", strategy).fn(state.kf, state.depos, cfg, pool))
+        if strategy in PLANE_VMAP_CHARGE_GRID:
+            f = registry.get_strategy("charge_grid", strategy).fn
+            grid = jax.vmap(lambda k, d: f(k, d, cfg, pool))(
+                plane_fold_keys(state.kf, specs), state.depos)
+            return state._replace(grid=grid)
+        return loop_fn(state)
 
     return Stage("charge_grid", fn, op="charge_grid")
 
@@ -335,18 +395,61 @@ def convolve_stage(cfg: LArTPCConfig, resp,
     response, dispatched through the ``fft_convolve`` strategy registry.
 
     Multi-plane: ``resp`` is a per-plane sequence (bipolar induction /
-    unipolar collection transforms), one convolution per plane."""
+    unipolar collection transforms). ``plane_batching="loop"`` runs one
+    convolution per plane; "stacked" runs ONE batched rfft2 over the
+    (P, W, T) grid with the per-plane response spectra stacked to
+    (P, wp, tf) — bit-identical (batched FFTs compute each plane with the
+    same per-plane program) — falling back to the loop when the per-plane
+    resolved strategies are not uniformly "rfft2" or the responses disagree
+    on padded shape."""
     multi = cfg.num_planes > 1
     resps = _as_plane_responses(cfg, resp, planes)
+    stacked = (multi and resolve_plane_batching(cfg) == "stacked"
+               and len({r.pad_shape for r in resps}) == 1)
+
+    def resolved_names(grid_shape):
+        """Per-plane strategy names, mirroring ``fft_convolve`` dispatch."""
+        from repro.tune import autotune, registry
+
+        names = []
+        for r in resps:
+            s = cfg.fft_strategy
+            if s is None:
+                s = registry.default_strategy("fft_convolve")
+            elif s == "auto":
+                shape = {"num_wires": grid_shape[0],
+                         "num_ticks": grid_shape[1],
+                         "response_wires": r.kernel.shape[0],
+                         "response_ticks": r.kernel.shape[1],
+                         "plane": r.plane}
+                s = autotune.resolve("fft_convolve", None,
+                                     shape=shape).strategy
+            names.append(s)
+        return names
+
+    def loop_fn(state: SimState) -> SimState:
+        signal = jnp.stack([
+            fft_convolve(state.grid[i], r, cfg.fft_strategy)
+            for i, r in enumerate(resps)])
+        return state._replace(signal=signal)
 
     def fn(state: SimState) -> SimState:
         if not multi:
             return state._replace(
                 signal=fft_convolve(state.grid, resps[0], cfg.fft_strategy))
-        signal = jnp.stack([
-            fft_convolve(state.grid[i], r, cfg.fft_strategy)
-            for i, r in enumerate(resps)])
-        return state._replace(signal=signal)
+        if not stacked:
+            return loop_fn(state)
+        w, t = state.grid.shape[-2:]
+        if any(n != "rfft2" for n in resolved_names((w, t))):
+            return loop_fn(state)
+        from repro.core.fft_conv import _pad_grid
+
+        wp, tp = resps[0].pad_shape
+        padded = jnp.stack([_pad_grid(state.grid[i], r)
+                            for i, r in enumerate(resps)])
+        rfreq = jnp.stack([r.freq for r in resps])
+        out = jnp.fft.irfft2(jnp.fft.rfft2(padded) * rfreq, s=(wp, tp))
+        return state._replace(signal=out[:, :w, :t])
 
     return Stage("convolve", fn, op="fft_convolve")
 
@@ -354,18 +457,26 @@ def convolve_stage(cfg: LArTPCConfig, resp,
 def noise_stage(cfg: LArTPCConfig,
                 planes: Optional[Tuple[int, ...]] = None) -> Stage:
     """Add frequency-shaped electronics noise to the signal (multi-plane:
-    an independent realization per plane via plane-folded subkeys)."""
+    an independent realization per plane via plane-folded subkeys —
+    ``plane_batching="stacked"`` draws every plane's spectrum in ONE
+    batched dispatch over the stacked subkeys, bit-identical to the
+    per-plane loop)."""
     specs = _selected_specs(cfg, planes)
     multi = cfg.num_planes > 1
+    stacked = multi and resolve_plane_batching(cfg) == "stacked"
 
     def fn(state: SimState) -> SimState:
         denom = jnp.maximum(cfg.adc_per_electron, 1e-30)
         if not multi:
             return state._replace(
                 signal=state.signal + simulate_noise(state.kn, cfg) / denom)
-        noise = jnp.stack([
-            simulate_noise(jax.random.fold_in(state.kn, spec.index), cfg)
-            for spec in specs])
+        if stacked:
+            noise = jax.vmap(lambda k: simulate_noise(k, cfg))(
+                plane_fold_keys(state.kn, specs))
+        else:
+            noise = jnp.stack([
+                simulate_noise(jax.random.fold_in(state.kn, spec.index), cfg)
+                for spec in specs])
         return state._replace(signal=state.signal + noise / denom)
 
     return Stage("noise", fn)

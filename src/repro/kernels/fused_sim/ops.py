@@ -16,11 +16,15 @@ import functools
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.config import LArTPCConfig
 from repro.core.depo import DepoSet, depo_patch_origin
 from repro.kernels import default_interpret
-from repro.kernels.fused_sim.kernel import (fused_rasterize_scatter,
-                                            fused_rasterize_scatter_compact)
+from repro.kernels.fused_sim.kernel import (
+    fused_rasterize_scatter, fused_rasterize_scatter_compact,
+    fused_rasterize_scatter_multiplane,
+    fused_rasterize_scatter_multiplane_compact)
 from repro.kernels.scatter_add.ops import (active_tile_cap,
                                            bin_depos_to_tiles,
                                            bin_depos_to_tiles_compact,
@@ -41,6 +45,11 @@ def _resolve_k_max(k_max: int, n: int, cfg: LArTPCConfig, tw: int,
 
 def _seed_from(key):
     return None if key is None else jax.random.key_data(key)
+
+
+def _seeds_from(keys):
+    """Stacked (P, 2) raw key data from stacked per-plane keys (or None)."""
+    return None if keys is None else jax.random.key_data(keys)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tw", "tt", "k_max",
@@ -105,3 +114,89 @@ def simulate_charge_grid_compact(depos: DepoSet, cfg: LArTPCConfig,
                                 cfg.num_wires, cfg.num_ticks, tw, tt, t0=t0)
     return _simulate_compact_jit(depos, cfg, tw, tt, k_max, n_cap, interpret,
                                  key)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tw", "tt", "k_max",
+                                             "interpret"))
+def simulate_charge_grid_multiplane(depos: DepoSet, cfg: LArTPCConfig,
+                                    tw: int = 64, tt: int = 256,
+                                    k_max: int = 0,
+                                    interpret: bool | None = None,
+                                    keys=None):
+    """Fused depos -> (P, W, T) charge grids, ONE launch for all planes.
+
+    ``depos`` carries a leading plane axis (P, N) — the per-plane
+    projections of one event's physical depos. ``keys`` is the stacked
+    per-plane subkey array (``fold_in(kf, p)`` per plane) enabling
+    in-kernel fluctuation; plane p's grid is bit-identical to
+    ``simulate_charge_grid`` run on plane p's depos with plane p's key.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    num_planes, n = depos.wire.shape
+    w0, t0 = depo_patch_origin(depos, cfg)
+    k_max = _resolve_k_max(k_max, n, cfg, tw, tt)
+    # per-plane dense binned lists (plane-LOCAL depo ids), concatenated
+    # plane-major — matching the kernel's flat i = p*n_tiles + t layout
+    ids = jnp.concatenate([
+        bin_depos_to_tiles(w0[p], t0[p], cfg.patch_wires, cfg.patch_ticks,
+                           cfg.num_wires, cfg.num_ticks, tw, tt, k_max)[0]
+        for p in range(num_planes)])
+    return fused_rasterize_scatter_multiplane(
+        depos.wire, depos.tick, depos.sigma_w, depos.sigma_t, depos.charge,
+        w0, t0, ids, num_planes=num_planes, num_wires=cfg.num_wires,
+        num_ticks=cfg.num_ticks, tw=tw, tt=tt, k_max=k_max,
+        pw=cfg.patch_wires, pt=cfg.patch_ticks, interpret=interpret,
+        seeds=_seeds_from(keys), fluctuate=keys is not None)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tw", "tt", "k_max",
+                                             "n_cap", "interpret"))
+def _simulate_multiplane_compact_jit(depos: DepoSet, cfg: LArTPCConfig,
+                                     tw: int, tt: int, k_max: int,
+                                     n_cap: int, interpret: bool, keys):
+    num_planes, _ = depos.wire.shape
+    w0, t0 = depo_patch_origin(depos, cfg)
+    actives, ids = [], []
+    for p in range(num_planes):
+        a, i = bin_depos_to_tiles_compact(
+            w0[p], t0[p], cfg.patch_wires, cfg.patch_ticks, cfg.num_wires,
+            cfg.num_ticks, tw, tt, k_max, n_cap)
+        actives.append(a)
+        ids.append(i)
+    return fused_rasterize_scatter_multiplane_compact(
+        depos.wire, depos.tick, depos.sigma_w, depos.sigma_t, depos.charge,
+        w0, t0, jnp.concatenate(actives), jnp.concatenate(ids),
+        num_planes=num_planes, num_wires=cfg.num_wires,
+        num_ticks=cfg.num_ticks, tw=tw, tt=tt, k_max=k_max,
+        pw=cfg.patch_wires, pt=cfg.patch_ticks, interpret=interpret,
+        seeds=_seeds_from(keys), fluctuate=keys is not None)
+
+
+def simulate_charge_grid_multiplane_compact(depos: DepoSet,
+                                            cfg: LArTPCConfig, tw: int = 64,
+                                            tt: int = 256, k_max: int = 0,
+                                            interpret: bool | None = None,
+                                            keys=None,
+                                            n_active: int | None = None):
+    """Fused multi-plane charge grids over OCCUPIED tiles only.
+
+    Every plane's compacted tile list gets the SAME bucketed capacity
+    ``n_cap`` (the max over planes of the measured occupancy, or the
+    static min(n_tiles, 4N) bound under a trace) so the concatenated
+    launch stays rectangular. Bit-identical to
+    ``simulate_charge_grid_multiplane`` for the same keys.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    _, _, n_tiles = _grid_dims(cfg, tw, tt)
+    num_planes = depos.wire.shape[0]
+    k_max = _resolve_k_max(k_max, depos.n, cfg, tw, tt)
+    if n_active is not None:
+        n_cap = min(n_tiles, next_pow2(n_active))
+    else:
+        w0, t0 = depo_patch_origin(depos, cfg)
+        n_cap = max(
+            active_tile_cap(w0[p], cfg.patch_wires, cfg.patch_ticks,
+                            cfg.num_wires, cfg.num_ticks, tw, tt, t0=t0[p])
+            for p in range(num_planes))
+    return _simulate_multiplane_compact_jit(depos, cfg, tw, tt, k_max, n_cap,
+                                            interpret, keys)

@@ -172,13 +172,20 @@ def op_shape(op: str, cfg) -> Dict[str, int]:
     if op == "drift":
         return {"num_depos": cfg.num_depos}
     if op in ("scatter_add", "charge_grid"):
-        return {
+        shape = {
             "num_depos": cfg.num_depos,
             "num_wires": cfg.num_wires,
             "num_ticks": cfg.num_ticks,
             "patch_wires": cfg.patch_wires,
             "patch_ticks": cfg.patch_ticks,
         }
+        if op == "charge_grid":
+            # the plane count changes the PROBLEM, not just its size: a
+            # 3-plane dispatch compares single-plane candidates (paying the
+            # per-plane loop) against the fused multi-plane kernels, so a
+            # single-plane winner must not key multi-plane dispatches
+            shape["num_planes"] = getattr(cfg, "num_planes", 1)
+        return shape
     if op in ("fft_convolve", "deconvolve"):
         from repro.config import plane_specs
 
@@ -278,14 +285,44 @@ def _scatter_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
 
 
 def _charge_grid_problem(cfg, ctx: TuneContext, sample_depos: Optional[int]):
-    depos = _problem_depos(cfg, sample_depos)
     key = jax.random.key(1)
+    avail = registry.available_strategies("charge_grid", ctx)
+    if getattr(cfg, "num_planes", 1) > 1:
+        from repro.config import plane_specs
+        from repro.core.depo import generate_plane_depos
+        from repro.core.stages import MULTIPLANE_CHARGE_GRID
+
+        n = sample_depos or cfg.num_depos
+        depos = generate_plane_depos(jax.random.key(0), cfg, n)
+        jax.block_until_ready(depos)
+        specs = plane_specs(cfg)
+
+        def make_mp(name, strat):
+            if name in MULTIPLANE_CHARGE_GRID:
+                # fused multi-plane kernels take the (P, N) depos whole
+                f = jax.jit(lambda k, d: strat.fn(k, d, cfg, None))
+                return lambda: f(key, depos)
+
+            # single-plane candidates pay the FULL per-plane loop (the
+            # same fold_in schedule the executor runs), so the board
+            # compares like against like: all P planes either way
+            def loop(k, d):
+                return jax.numpy.stack([
+                    strat.fn(jax.random.fold_in(k, s.index),
+                             jax.tree.map(lambda x, i=i: x[i], d), cfg, None)
+                    for i, s in enumerate(specs)])
+
+            f = jax.jit(loop)
+            return lambda: f(key, depos)
+
+        return {name: make_mp(name, s) for name, s in avail.items()}
+
+    depos = _problem_depos(cfg, sample_depos)
 
     def make(strat):
         f = jax.jit(lambda k, d: strat.fn(k, d, cfg, None))
         return lambda: f(key, depos)
 
-    avail = registry.available_strategies("charge_grid", ctx)
     return {name: make(s) for name, s in avail.items()}
 
 
