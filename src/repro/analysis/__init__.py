@@ -1,0 +1,16 @@
+"""Static-analysis gate for the stage graph (docs/analysis.md).
+
+Two layers:
+
+* ``repro.analysis.hlo`` + ``repro.analysis.audit`` — compiled-program
+  contracts (collectives, dtypes, donation, host calls, recompiles) diffed
+  against the committed ``AUDIT_contracts.json``.
+* ``repro.analysis.lint`` — repo-specific JAX AST lint rules.
+
+This package imports lazily on purpose: ``hlo`` and ``lint`` are stdlib-
+only, and ``audit`` must be imported AFTER the fake-device environment is
+pinned — so nothing here eagerly imports jax.
+"""
+from repro.analysis import hlo  # noqa: F401  (stdlib-only, always safe)
+
+__all__ = ["hlo"]

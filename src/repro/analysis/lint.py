@@ -1,0 +1,694 @@
+"""repro-lint: AST-level lint rules for the repo's JAX discipline.
+
+ruff covers generic Python; these rules encode the *repo-specific* mistakes
+the stage graph keeps inviting — the ones that compile fine, run fine on
+one backend, and quietly break reproducibility or portability:
+
+  key-reuse            : a PRNG key consumed by two sampler calls without a
+                         ``split``/``fold_in`` between them — correlated
+                         noise that no test of either call alone catches.
+  traced-branch        : Python ``if``/``while`` on a likely-traced value
+                         inside a stage/jitted function — a
+                         ConcretizationTypeError on the traced path, or
+                         worse, a silently baked-in branch.
+  host-sync            : ``.item()`` / ``float()`` / ``np.asarray()`` on a
+                         traced value in jitted code — a device->host
+                         round-trip per call (the paper's host/device
+                         data-movement tax) or a tracer leak.
+  mutable-default      : mutable default argument — shared state across
+                         calls; in this repo usually a cache that aliases
+                         between configs.
+  config-replace-guard : ``dataclasses.replace(cfg, field=traced)`` inside
+                         a trace without the ``isinstance(x, jax.Array)``
+                         guard pattern PR 7 established — the replace
+                         silently hashes a tracer into the config and
+                         retriggers compilation per call.
+  f64-literal          : explicit ``float64`` dtype — dead under the
+                         default x64-disabled runtime and a 2x memory-
+                         traffic bomb the day someone enables x64.
+
+Run as ``python -m repro.analysis.lint src/`` (text findings, exit 1 when
+any) or with ``--json`` for machine-readable output. Suppress a deliberate
+exception on its own line with ``# repro-lint: disable=<rule>[,<rule>]``,
+or file-wide with ``# repro-lint: disable-file=<rule>``; suppressions are
+grep-audit-able by design.
+
+Scope heuristics (documented, deliberately simple — no cross-module
+analysis): a function counts as *traced* when it (a) is decorated with or
+passed to a jax transform (``jit``/``vmap``/``grad``/``shard_map``/
+``lax.scan``/...), (b) is passed to ``Stage(...)`` or a
+``*graph*.replace(stage=fn)`` call, or (c) is an inner def returned from a
+``*_stage``/``make_*`` factory. Likely-traced *values* are the traced
+function's parameters (minus ``cfg``/``config``/``self``) plus anything
+assigned from them; references through static attributes
+(``.shape``/``.ndim``/``.dtype``), ``len()``, or ``isinstance()`` do not
+count — those are trace-time constants.
+
+Pure stdlib on purpose: the lint half of the CI gate must run with or
+without jax installed.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: rule name -> one-line description (the docs/analysis.md catalog source)
+RULES: Dict[str, str] = {
+    "key-reuse": "PRNG key consumed by more than one sampler call without "
+                 "an intervening split/fold_in (correlated randomness)",
+    "traced-branch": "Python if/while on a likely-traced value inside a "
+                     "traced function (ConcretizationTypeError or a "
+                     "baked-in branch)",
+    "host-sync": ".item()/float()/np.asarray() on a traced value inside a "
+                 "traced function (device->host sync per call)",
+    "mutable-default": "mutable default argument (state shared across "
+                       "calls)",
+    "config-replace-guard": "dataclasses.replace(config, ...) with a "
+                            "traced value and no isinstance(jax.Array) "
+                            "guard (retrace per call)",
+    "f64-literal": "explicit float64 dtype (x64 leak / 2x memory traffic)",
+}
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w\-,\s]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*repro-lint:\s*disable-file=([\w\-,\s]+)")
+
+#: jax transform callables (tail attribute name) whose function-valued args
+#: become traced
+_TRANSFORMS = {"jit", "vmap", "pmap", "grad", "value_and_grad", "shard_map",
+               "checkpoint", "remat", "scan", "while_loop", "cond",
+               "fori_loop", "switch", "custom_jvp", "custom_vjp",
+               "named_call", "pure_callback"}
+
+#: jax.random samplers that CONSUME a key (arg 0); split/fold_in/key
+#: constructors derive fresh keys instead and are exempt
+_KEY_DERIVERS = {"split", "fold_in", "key", "PRNGKey", "clone",
+                 "wrap_key_data", "key_data"}
+
+#: params that are trace-time static by repo convention
+_STATIC_PARAMS = {"cfg", "config", "self", "cls", "spec", "resp", "mesh",
+                  "axes", "pool"}
+
+#: attribute accesses that are static under jit (shape metadata)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding",
+                 "name", "names", "stages", "stage_names"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _tail_name(func: ast.expr) -> str:
+    """'jax.lax.scan' -> 'scan'; bare Name -> its id; else ''."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _dotted(node: ast.expr) -> str:
+    """Best-effort dotted path of an expression ('jax.lax.scan', 'np')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# Traced-scope discovery
+# ---------------------------------------------------------------------------
+
+
+def _decorated_traced(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _tail_name(target) in _TRANSFORMS:
+            return True
+        # functools.partial(jax.jit, ...) style
+        if isinstance(dec, ast.Call):
+            for arg in dec.args:
+                if _tail_name(arg) in _TRANSFORMS:
+                    return True
+    return False
+
+
+class _TracedScopeCollector(ast.NodeVisitor):
+    """Names of functions that end up inside a jax trace (module-local)."""
+
+    def __init__(self) -> None:
+        self.traced: Set[str] = set()
+        self._factory_stack: List[ast.AST] = []
+
+    def _mark(self, node: ast.expr) -> None:
+        if isinstance(node, ast.Name):
+            self.traced.add(node.id)
+        elif isinstance(node, ast.Call):  # jax.jit(fn) nested in a call
+            for a in node.args:
+                self._mark(a)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        tail = _tail_name(node.func)
+        if tail in _TRANSFORMS:
+            for arg in node.args:
+                self._mark(arg)
+            for kw in node.keywords:
+                if kw.arg in ("fun", "f", "fn", "body_fun", "cond_fun",
+                              "callback"):
+                    self._mark(kw.value)
+        elif tail == "Stage":
+            # Stage("name", fn, ...) — every function-valued arg is traced
+            for arg in node.args[1:]:
+                self._mark(arg)
+            for kw in node.keywords:
+                self._mark(kw.value)
+        elif tail == "replace" and isinstance(node.func, ast.Attribute):
+            # <graph>.replace(stage=fn): the SimGraph specialization hook
+            if "graph" in _dotted(node.func.value).lower():
+                for kw in node.keywords:
+                    self._mark(kw.value)
+        self.generic_visit(node)
+
+    def _visit_factory(self, node) -> None:
+        name = node.name
+        if name.endswith("_stage") or name.startswith("make_"):
+            # inner defs returned from a stage/executor factory are traced
+            inner = {n.name for n in ast.walk(node)
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))} - {name}
+            for ret in ast.walk(node):
+                if isinstance(ret, ast.Return) and ret.value is not None:
+                    for sub in ast.walk(ret.value):
+                        if isinstance(sub, ast.Name) and sub.id in inner:
+                            self.traced.add(sub.id)
+        if _decorated_traced(node):
+            self.traced.add(name)
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_factory
+    visit_AsyncFunctionDef = _visit_factory
+
+
+def traced_function_names(tree: ast.Module) -> Set[str]:
+    col = _TracedScopeCollector()
+    col.visit(tree)
+    return col.traced
+
+
+# ---------------------------------------------------------------------------
+# Taint (likely-traced values inside one function)
+# ---------------------------------------------------------------------------
+
+
+def _assigned_names(target: ast.expr) -> Iterable[str]:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            yield node.id
+
+
+def _static_param_names(fn: ast.AST) -> Set[str]:
+    """Params jit treats as python-static: the conventional names plus
+    anything named by ``static_argnames``/``static_argnums`` in a jit
+    decorator (``@partial(jax.jit, static_argnames=(...))``)."""
+    out = set(_STATIC_PARAMS)
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for dec in getattr(fn, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg in ("static_argnames", "static_broadcasted_argnums"):
+                out.update(c.value for c in ast.walk(kw.value)
+                           if isinstance(c, ast.Constant)
+                           and isinstance(c.value, str))
+            elif kw.arg == "static_argnums":
+                for c in ast.walk(kw.value):
+                    if isinstance(c, ast.Constant) \
+                            and isinstance(c.value, int) \
+                            and 0 <= c.value < len(pos):
+                        out.add(pos[c.value])
+    return out
+
+
+def tainted_names(fn: ast.AST) -> Set[str]:
+    """Likely-traced locals of a traced function: parameters (minus the
+    static-by-convention and jit-static ones) plus anything assigned from
+    a traced *value* — one forward propagation pass in statement order
+    (good enough: the repo's stage fns are straight-line). Assignments
+    whose tainted references only reach through static metadata
+    (``x.shape``/``len(x)``) do NOT taint their target: shapes are
+    trace-time constants."""
+    args = fn.args
+    params = [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    if args.vararg:
+        params.append(args.vararg.arg)
+    if args.kwarg:
+        params.append(args.kwarg.arg)
+    static = _static_param_names(fn)
+    tainted = {p for p in params if p not in static
+               and not p.startswith("_")}
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            if value is None:
+                continue
+            if _value_refs(value, tainted):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    tainted.update(_assigned_names(t))
+    return tainted
+
+
+def _value_refs(node: ast.expr, tainted: Set[str]) -> List[ast.Name]:
+    """Tainted Name references in ``node`` that reach a traced *value* —
+    skipping static metadata (``x.shape``/``len(x)``/``isinstance(x,..)``)."""
+    skip: Set[int] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+            for inner in ast.walk(sub.value):
+                skip.add(id(inner))
+        elif isinstance(sub, ast.Call):
+            tail = _tail_name(sub.func)
+            if tail in ("len", "isinstance", "hasattr", "getattr", "type",
+                        "id", "repr"):
+                for a in sub.args:
+                    for inner in ast.walk(a):
+                        skip.add(id(inner))
+        elif isinstance(sub, ast.Compare):
+            # `x is None` / `x is not None` — a python-level structure check
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in sub.ops):
+                for inner in ast.walk(sub):
+                    skip.add(id(inner))
+    return [n for n in ast.walk(node)
+            if isinstance(n, ast.Name) and n.id in tainted
+            and id(n) not in skip]
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def _rule_mutable_default(tree: ast.Module, path: str) -> List[Finding]:
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for default in fn.args.defaults + [d for d in fn.args.kw_defaults
+                                           if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call)
+                    and _tail_name(default.func) in ("list", "dict", "set",
+                                                     "defaultdict")):
+                out.append(Finding(
+                    path, default.lineno, default.col_offset,
+                    "mutable-default",
+                    f"mutable default argument in {fn.name}() is shared "
+                    "across calls; default to None and build inside"))
+    return out
+
+
+def _rule_f64_literal(tree: ast.Module, path: str) -> List[Finding]:
+    """``np/jnp.float64`` attributes and ``"float64"`` strings in dtype
+    positions (``dtype=`` kwargs, ``.astype(...)`` args). Attribute uses
+    inside a comparison are exempt — ``x.dtype in (f32, f64)`` *checks*
+    a dtype, it doesn't create one."""
+    out = []
+    compare_members: Set[int] = set()
+    dtype_positions: List[ast.expr] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Compare):
+            for sub in ast.walk(node):
+                compare_members.add(id(sub))
+        elif isinstance(node, ast.Call):
+            dtype_positions += [kw.value for kw in node.keywords
+                                if kw.arg == "dtype"]
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype":
+                dtype_positions += list(node.args)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64" \
+                and id(node) not in compare_members:
+            root = _dotted(node).split(".")[0]
+            if root in ("np", "numpy", "jnp", "jax"):
+                out.append(Finding(
+                    path, node.lineno, node.col_offset, "f64-literal",
+                    f"explicit {_dotted(node)}: dead under the default "
+                    "x64-disabled runtime, 2x memory traffic if enabled"))
+    for pos in dtype_positions:
+        for node in ast.walk(pos):
+            if isinstance(node, ast.Constant) \
+                    and node.value in ("float64", "f64", "double"):
+                out.append(Finding(
+                    path, node.lineno, node.col_offset, "f64-literal",
+                    f"dtype literal {node.value!r}"))
+    return out
+
+
+def _is_key_consumer(call: ast.Call) -> bool:
+    """jax.random sampler call that consumes its key argument."""
+    dotted = _dotted(call.func)
+    parts = dotted.split(".")
+    if "random" not in parts[:-1]:
+        return False
+    return parts[-1] not in _KEY_DERIVERS
+
+
+def _branch_path(stack: Tuple[Tuple[int, str], ...]) -> Tuple:
+    return stack
+
+
+class _KeyReuseVisitor(ast.NodeVisitor):
+    """Per-function key-consumption tracker.
+
+    A *consumption* is passing name K as the key (first) argument of a
+    ``jax.random.<sampler>`` call. Two consumptions of the same name
+    conflict when no reassignment of K sits between them and neither lives
+    in a sibling branch of the other (if/else arms are alternative paths).
+    """
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self.findings: List[Finding] = []
+        # name -> list of (branch_path, lineno, col)
+        self._uses: Dict[str, List[Tuple[Tuple, int, int]]] = {}
+        self._branch: List[Tuple[int, str]] = []
+
+    def _conflicts(self, a: Tuple, b: Tuple) -> bool:
+        # same path, or one path is an ancestor of the other
+        shorter, longer = sorted((a, b), key=len)
+        return longer[:len(shorter)] == shorter
+
+    def _consume(self, name: str, node: ast.AST) -> None:
+        here = tuple(self._branch)
+        for prev_path, line, _col in self._uses.get(name, []):
+            if self._conflicts(prev_path, here):
+                self.findings.append(Finding(
+                    self.path, node.lineno, node.col_offset, "key-reuse",
+                    f"key {name!r} already consumed at line {line}; "
+                    "split/fold_in before sampling again"))
+                break
+        self._uses.setdefault(name, []).append(
+            (here, node.lineno, node.col_offset))
+
+    def _reassign(self, name: str) -> None:
+        self._uses.pop(name, None)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_key_consumer(node) and node.args:
+            key_arg = node.args[0]
+            if isinstance(key_arg, ast.Name):
+                self._consume(key_arg.id, node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)  # RHS consumption first
+        for t in node.targets:
+            for name in _assigned_names(t):
+                self._reassign(name)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        for name in _assigned_names(node.target):
+            self._reassign(name)
+
+    def visit_For(self, node: ast.For) -> None:
+        # loop bodies execute repeatedly: a single consumption inside the
+        # body of a loop is a reuse across iterations UNLESS the key is
+        # derived fresh per iteration — approximated by treating the loop
+        # target as a reassignment and keeping body uses in their own
+        # branch path (distinct per visit, so same-body pairs still flag)
+        for name in _assigned_names(node.target):
+            self._reassign(name)
+        self._branch.append((node.lineno, "for"))
+        for stmt in node.body:
+            self.visit(stmt)
+        self._branch.pop()
+        for stmt in node.orelse:
+            self.visit(stmt)
+
+    def _drop_prefix(self, prefix: Tuple) -> None:
+        for name in list(self._uses):
+            kept = [u for u in self._uses[name]
+                    if u[0][:len(prefix)] != prefix]
+            if kept:
+                self._uses[name] = kept
+            else:
+                del self._uses[name]
+
+    @staticmethod
+    def _terminates(stmts: List[ast.stmt]) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+    def visit_If(self, node: ast.If) -> None:
+        self.visit(node.test)
+        for arm, body in (("if", node.body), ("else", node.orelse)):
+            self._branch.append((node.lineno, arm))
+            prefix = tuple(self._branch)
+            for stmt in body:
+                self.visit(stmt)
+            self._branch.pop()
+            if self._terminates(body):
+                # a returning/raising arm can't flow into later code: its
+                # consumptions die with it (`if ...: return sample(k)` then
+                # `return other_sample(k)` is NOT a reuse)
+                self._drop_prefix(prefix)
+
+    def _skip_nested(self, node) -> None:
+        pass  # nested defs get their own visitor pass
+
+    visit_FunctionDef = _skip_nested
+    visit_AsyncFunctionDef = _skip_nested
+    visit_Lambda = _skip_nested
+
+
+def _rule_key_reuse(tree: ast.Module, path: str) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = [n for n in ast.walk(tree)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in scopes:
+        visitor = _KeyReuseVisitor(path)
+        for stmt in fn.body:
+            visitor.visit(stmt)
+        out.extend(visitor.findings)
+    return out
+
+
+def _rule_traced_branch(fn: ast.AST, tainted: Set[str],
+                        path: str) -> List[Finding]:
+    out = []
+    own_nested = {id(sub) for n in ast.walk(fn)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not fn
+                  for sub in ast.walk(n)}
+    for node in ast.walk(fn):
+        if id(node) in own_nested:
+            continue
+        if isinstance(node, (ast.If, ast.While)):
+            refs = _value_refs(node.test, tainted)
+            if refs:
+                kind = "while" if isinstance(node, ast.While) else "if"
+                out.append(Finding(
+                    path, node.lineno, node.col_offset, "traced-branch",
+                    f"python `{kind}` on likely-traced {refs[0].id!r} "
+                    "inside a traced function; use jnp.where/lax.cond or "
+                    "guard with isinstance(x, jax.Array)"))
+    return out
+
+
+_HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_HOST_SYNC_CALLS = {"float", "int", "bool"}
+_HOST_SYNC_NP = {"asarray", "array", "copyto"}
+
+
+def _rule_host_sync(fn: ast.AST, tainted: Set[str],
+                    path: str) -> List[Finding]:
+    out = []
+    own_nested = {id(sub) for n in ast.walk(fn)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not fn
+                  for sub in ast.walk(n)}
+    for node in ast.walk(fn):
+        if id(node) in own_nested or not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        hit = None
+        if (isinstance(func, ast.Attribute)
+                and func.attr in _HOST_SYNC_METHODS
+                and _value_refs(func.value, tainted)):
+            hit = f".{func.attr}()"
+        elif (isinstance(func, ast.Name) and func.id in _HOST_SYNC_CALLS
+              and node.args and _value_refs(node.args[0], tainted)):
+            hit = f"{func.id}()"
+        elif (isinstance(func, ast.Attribute)
+              and func.attr in _HOST_SYNC_NP
+              and _dotted(func.value).split(".")[0] in ("np", "numpy", "onp")
+              and node.args and _value_refs(node.args[0], tainted)):
+            hit = f"np.{func.attr}()"
+        elif _dotted(func) in ("jax.device_get",) and node.args \
+                and _value_refs(node.args[0], tainted):
+            hit = "jax.device_get()"
+        if hit:
+            out.append(Finding(
+                path, node.lineno, node.col_offset, "host-sync",
+                f"{hit} on a likely-traced value inside a traced function "
+                "forces a device->host sync (or leaks a tracer)"))
+    return out
+
+
+def _rule_config_replace(fn: ast.AST, tainted: Set[str],
+                         path: str) -> List[Finding]:
+    """``dataclasses.replace(cfg, field=<traced>)`` inside a traced scope
+    must sit under the PR 7 ``isinstance(x, jax.Array)`` guard — detected
+    here as: replace() with a tainted kwarg and no ``isinstance`` anywhere
+    in the enclosing function (the guard is a sibling branch, so a scope-
+    level check is the right granularity for a linter)."""
+    has_guard = any(isinstance(n, ast.Call)
+                    and _tail_name(n.func) == "isinstance"
+                    for n in ast.walk(fn))
+    if has_guard:
+        return []
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if _tail_name(node.func) != "replace":
+            continue
+        dotted = _dotted(node.func)
+        looks_dc = dotted.startswith(("dataclasses.", "dc.")) or \
+            dotted == "replace"
+        if not looks_dc or not node.args:
+            continue
+        target = node.args[0]
+        target_name = _dotted(target)
+        if "cfg" not in target_name and "config" not in target_name:
+            continue
+        bad = [kw.arg for kw in node.keywords
+               if kw.value is not None and _value_refs(kw.value, tainted)]
+        if bad:
+            out.append(Finding(
+                path, node.lineno, node.col_offset, "config-replace-guard",
+                f"dataclasses.replace on config with traced value(s) "
+                f"{bad} inside a traced function without an "
+                "isinstance(x, jax.Array) guard (PR 7 pattern) — the "
+                "tracer is hashed into the config and retraces per call"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str) -> List[Finding]:
+    """All findings for one file's source text (suppressions applied)."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 0, exc.offset or 0,
+                        "parse-error", str(exc))]
+    findings: List[Finding] = []
+    findings += _rule_mutable_default(tree, path)
+    findings += _rule_f64_literal(tree, path)
+    findings += _rule_key_reuse(tree, path)
+
+    traced = traced_function_names(tree)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn.name not in traced and not _decorated_traced(fn):
+            continue
+        tainted = tainted_names(fn)
+        findings += _rule_traced_branch(fn, tainted, path)
+        findings += _rule_host_sync(fn, tainted, path)
+        findings += _rule_config_replace(fn, tainted, path)
+
+    return _apply_suppressions(src, findings)
+
+
+def _apply_suppressions(src: str, findings: List[Finding]) -> List[Finding]:
+    lines = src.splitlines()
+    file_disabled: Set[str] = set()
+    line_disabled: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _DISABLE_FILE_RE.search(line)
+        if m:
+            file_disabled.update(r.strip() for r in m.group(1).split(","))
+        m = _DISABLE_RE.search(line)
+        if m:
+            line_disabled[i] = {r.strip() for r in m.group(1).split(",")}
+    out = []
+    for f in findings:
+        if f.rule in file_disabled or "all" in file_disabled:
+            continue
+        rules = line_disabled.get(f.line, set())
+        if f.rule in rules or "all" in rules:
+            continue
+        out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for root in paths:
+        if os.path.isfile(root):
+            files = [root]
+        else:
+            files = sorted(
+                os.path.join(dirpath, name)
+                for dirpath, _dirs, names in os.walk(root)
+                for name in names if name.endswith(".py"))
+        for fp in files:
+            with open(fp, encoding="utf-8") as fh:
+                findings.extend(lint_source(fh.read(), fp))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="repo-specific JAX lint rules (see docs/analysis.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule in sorted(RULES):
+            print(f"{rule}: {RULES[rule]}")
+        return 0
+    findings = lint_paths(args.paths)
+    if args.json:
+        print(json.dumps([f.as_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        print(f"{len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

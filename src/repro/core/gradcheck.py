@@ -13,7 +13,14 @@ matter), loose enough not to flake on accumulation-order noise. Stages with
 quantized forwards (digitize) are checked end-to-end through an MSE loss
 whose averaging over the readout grid smooths the staircase; the exact STE
 pass-through property is asserted analytically in the tests instead.
+
+Every gradcheck case intentionally routes traced theta elements into the
+config via ``dataclasses.replace`` — that is the *calibration contract*
+under test, and the consumers (``transport``, ``make_response``, ...) carry
+the ``isinstance(jax.Array)`` guards. The scope-level lint heuristic can't
+see cross-module guards, so the rule is disabled file-wide here:
 """
+# repro-lint: disable-file=config-replace-guard
 from __future__ import annotations
 
 import dataclasses

@@ -1,0 +1,52 @@
+"""One-command static-analysis gate: repro-lint + the contract audit.
+
+    PYTHONPATH=src python -m repro.launch.audit            # what CI runs
+    PYTHONPATH=src python -m repro.launch.audit --planes 1 --devices 2
+
+Runs ``repro.analysis.lint`` over ``src/`` first (stdlib-only, fails fast
+and cheap), then ``repro.analysis.audit --check`` against the committed
+``AUDIT_contracts.json``. Exit is non-zero when either layer finds
+anything. Audit-layer options (``--planes/--devices/--baseline/--json/
+--programs``) pass straight through; ``--update`` refreshes the baseline
+instead of checking (lint still runs).
+
+Like ``launch/fit.py``, nothing here imports jax at module scope: the
+audit layer pins ``XLA_FLAGS``/``JAX_PLATFORMS`` before its first jax
+import, and the lint layer never needs jax at all.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.audit",
+        description="repro-lint + compiled-program contract audit "
+                    "(docs/analysis.md)")
+    ap.add_argument("--lint-paths", nargs="+", default=["src"],
+                    help="paths repro-lint sweeps (default: src)")
+    ap.add_argument("--skip-lint", action="store_true")
+    ap.add_argument("--skip-audit", action="store_true")
+    args, audit_args = ap.parse_known_args(argv)
+
+    rc = 0
+    if not args.skip_lint:
+        from repro.analysis import lint
+
+        print(f"== repro-lint {' '.join(args.lint_paths)}", flush=True)
+        rc = max(rc, lint.main(list(args.lint_paths)))
+    if not args.skip_audit:
+        from repro.analysis import audit
+
+        if not any(a in ("--check", "--update") for a in audit_args):
+            audit_args = ["--check", *audit_args]
+        print(f"== contract audit {' '.join(audit_args)}", flush=True)
+        rc = max(rc, audit.main(audit_args))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

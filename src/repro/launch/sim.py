@@ -43,6 +43,31 @@ from repro.core.validate import RunHealth, SimBatchError, is_oom_error
 from repro.launch.journal import RunJournal, run_fingerprint
 
 
+def stream_donation(backend: Optional[str] = None) -> bool:
+    """The streaming executor's donation policy, as a testable predicate.
+
+    Every launch stages a FRESH batch, so the input buffers are donated:
+    XLA recycles their device memory for outputs (cuts the steady-state
+    footprint by one (E, N_max) batch + keys). CPU never implements
+    donation — skip it there to avoid a pointless warning per compile.
+    The contract auditor pins the accelerator-side request
+    (``p*/streaming`` donated_args) through this same function.
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    return backend != "cpu"
+
+
+def make_streaming_sim_fn(cfg: LArTPCConfig, recon: bool = False,
+                          donate: Optional[bool] = None):
+    """The device program ``stream_simulate`` drives: ``make_batched_sim_fn``
+    with the streaming donation policy applied (``donate=None`` reads
+    ``stream_donation()`` for the live backend)."""
+    if donate is None:
+        donate = stream_donation()
+    return make_batched_sim_fn(cfg, donate=donate, recon=recon)
+
+
 def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
                     seed: int = 0, sim: Optional[Callable] = None,
                     pad_to: Optional[int] = None,
@@ -97,13 +122,8 @@ def stream_simulate(cfg: LArTPCConfig, num_events: int, batch_events: int = 1,
         raise ValueError(f"num_events must be >= 0, got {num_events}")
     if resume and journal is None:
         raise ValueError("resume=True needs a journal path")
-    # every launch stages a FRESH batch, so the input buffers are donated:
-    # XLA recycles their device memory for outputs (cuts the steady-state
-    # footprint by one (E, N_max) batch + keys). CPU never implements
-    # donation — skip it there to avoid a pointless warning per compile.
     if sim is None:
-        sim = make_batched_sim_fn(cfg, donate=jax.default_backend() != "cpu",
-                                  recon=recon)
+        sim = make_streaming_sim_fn(cfg, recon=recon)
     key = jax.random.key(seed)
     num_batches = -(-num_events // batch_events)
     # fixed depo padding across batches -> a single compiled program

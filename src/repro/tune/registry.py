@@ -24,7 +24,7 @@ lazily to avoid cycles.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Mapping, Optional
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 
@@ -54,6 +54,15 @@ class Strategy:
     kernels without a custom VJP and discrete-output ops (hit finding) are
     not. The calibration path (``repro.core.fit``) restricts strategy
     resolution to differentiable candidates via this predicate.
+
+    ``collectives`` declares which collective kinds ("all-reduce",
+    "reduce-scatter", ...) the candidate may emit when compiled. Every
+    current single-device strategy declares none — which is exactly the
+    invariant the contract auditor (``repro.analysis.audit``) enforces: a
+    collective appearing in a local executor's compiled program whose
+    strategies declare no collectives is a policy failure, not a baseline
+    diff. A future distributed-aware candidate opts out by declaring its
+    kinds here.
     """
 
     op: str
@@ -62,6 +71,7 @@ class Strategy:
     available: Optional[Callable[[TuneContext], bool]] = None
     note: str = ""
     differentiable: bool = True
+    collectives: Tuple[str, ...] = ()
 
     def is_available(self, ctx: TuneContext) -> bool:
         return self.available is None or bool(self.available(ctx))
@@ -79,12 +89,14 @@ def register_strategy(
     available: Optional[Callable[[TuneContext], bool]] = None,
     note: str = "",
     differentiable: bool = True,
+    collectives: Tuple[str, ...] = (),
 ):
     """Decorator: register ``fn`` as candidate ``name`` of hot op ``op``."""
 
     def deco(fn):
         _OPS.setdefault(op, {})[name] = Strategy(op, name, fn, available,
-                                                 note, differentiable)
+                                                 note, differentiable,
+                                                 tuple(collectives))
         return fn
 
     return deco
@@ -150,6 +162,18 @@ def differentiable_strategies(op: str) -> Dict[str, Strategy]:
 def is_differentiable(op: str, name: str) -> bool:
     """Whether candidate ``name`` of ``op`` supports ``jax.grad``."""
     return get_strategy(op, name).differentiable
+
+
+def declared_collectives(op: Optional[str] = None) -> Tuple[str, ...]:
+    """Union of collective kinds declared by registered strategies — of one
+    op, or of every op (``op=None``). The contract auditor's allowance for
+    single-device programs."""
+    ops = [op] if op is not None else list_ops()
+    kinds: set = set()
+    for o in ops:
+        for strat in strategies(o).values():
+            kinds.update(strat.collectives)
+    return tuple(sorted(kinds))
 
 
 def default_strategy(op: str, backend: Optional[str] = None) -> str:

@@ -1,0 +1,439 @@
+"""Tests for repro-lint (ISSUE 10 layer 2): every rule catches a minimal
+synthetic violation, stays quiet on the idiomatic counterpart, and the
+suppression machinery + repo sweep hold the gate at zero findings.
+"""
+import textwrap
+
+from repro.analysis.lint import (RULES, lint_paths, lint_source,
+                                 traced_function_names)
+
+
+def findings(src, path="x.py"):
+    return lint_source(textwrap.dedent(src), path)
+
+
+def rules_of(fs):
+    return [f.rule for f in fs]
+
+
+class TestKeyReuse:
+    def test_minimal_violation(self):
+        fs = findings("""
+            import jax
+            def f(key):
+                a = jax.random.normal(key, (3,))
+                b = jax.random.uniform(key, (3,))
+                return a + b
+        """)
+        assert rules_of(fs) == ["key-reuse"]
+
+    def test_split_between_is_clean(self):
+        fs = findings("""
+            import jax
+            def f(key):
+                k1, k2 = jax.random.split(key)
+                a = jax.random.normal(k1, (3,))
+                b = jax.random.uniform(k2, (3,))
+                return a + b
+        """)
+        assert fs == []
+
+    def test_reassignment_resets(self):
+        fs = findings("""
+            import jax
+            def f(key):
+                a = jax.random.normal(key, (3,))
+                key = jax.random.fold_in(key, 1)
+                b = jax.random.normal(key, (3,))
+                return a + b
+        """)
+        assert fs == []
+
+    def test_exclusive_branches_are_clean(self):
+        fs = findings("""
+            import jax
+            def f(key, mode):
+                if mode == "a":
+                    x = jax.random.normal(key, (3,))
+                else:
+                    x = jax.random.uniform(key, (3,))
+                return x
+        """)
+        assert fs == []
+
+    def test_returning_branch_is_clean(self):
+        """The init_params idiom: a branch that returns consumes the key on
+        an exclusive path."""
+        fs = findings("""
+            import jax
+            def f(key, init):
+                if init == "uniform":
+                    return jax.random.uniform(key, (3,))
+                return jax.random.normal(key, (3,))
+        """)
+        assert fs == []
+
+    def test_branch_then_fallthrough_flagged(self):
+        """A NON-returning branch consumption followed by a top-level one
+        is a real reuse on that path."""
+        fs = findings("""
+            import jax
+            def f(key, noisy):
+                extra = 0.0
+                if noisy:
+                    extra = jax.random.normal(key, (3,))
+                return jax.random.normal(key, (3,)) + extra
+        """)
+        assert rules_of(fs) == ["key-reuse"]
+
+    def test_loop_body_pair_flagged(self):
+        fs = findings("""
+            import jax
+            def f(key, n):
+                out = []
+                for i in range(n):
+                    out.append(jax.random.normal(key, (3,)))
+                    out.append(jax.random.uniform(key, (3,)))
+                return out
+        """)
+        assert rules_of(fs) == ["key-reuse"]
+
+    def test_fresh_key_per_iteration_clean(self):
+        fs = findings("""
+            import jax
+            def f(key, n):
+                out = []
+                for i in range(n):
+                    k = jax.random.fold_in(key, i)
+                    out.append(jax.random.normal(k, (3,)))
+                return out
+        """)
+        assert fs == []
+
+
+JIT_HEADER = ("import jax\n"
+              "import jax.numpy as jnp\n"
+              "import numpy as np\n"
+              "import functools\n")
+
+
+def findings_jit(src, path="x.py"):
+    """Like ``findings`` but with the jax import prolog prepended AFTER
+    dedenting (mixing indented literals breaks textwrap.dedent)."""
+    return lint_source(JIT_HEADER + textwrap.dedent(src), path)
+
+
+class TestTracedBranch:
+    def test_minimal_violation(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert rules_of(fs) == ["traced-branch"]
+
+    def test_while_flagged(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                while x < 10:
+                    x = x * 2
+                return x
+        """)
+        assert "traced-branch" in rules_of(fs)
+
+    def test_shape_branch_is_clean(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                if x.shape[0] > 2:
+                    return x[:2]
+                return x
+        """)
+        assert fs == []
+
+    def test_shape_derived_local_is_clean(self):
+        """Assignment through static metadata must not taint (the
+        stages.py `n_in = depos.wire.shape[-2]` idiom)."""
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                n = x.shape[0]
+                if n != 3:
+                    raise ValueError(n)
+                return x
+        """)
+        assert fs == []
+
+    def test_isinstance_guard_is_clean(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                if isinstance(x, jax.Array):
+                    return x * 2
+                return x
+        """)
+        assert fs == []
+
+    def test_static_argnames_param_is_clean(self):
+        fs = findings_jit("""
+            import functools
+            @functools.partial(jax.jit, static_argnames=("flag",))
+            def f(x, flag):
+                if flag:
+                    return x * 2
+                return x
+        """)
+        assert fs == []
+
+    def test_stage_fn_scope_detected(self):
+        """Functions passed to Stage(...) count as traced."""
+        fs = findings_jit("""
+            def drift_fn(state):
+                if state > 0:
+                    return state
+                return -state
+            STAGE = Stage("drift", drift_fn)
+        """)
+        assert rules_of(fs) == ["traced-branch"]
+
+    def test_factory_inner_def_detected(self):
+        """Inner defs returned from *_stage/make_* factories count."""
+        fs = findings_jit("""
+            def noise_stage(cfg):
+                def fn(state):
+                    if state > 0:
+                        return state
+                    return -state
+                return fn
+        """)
+        assert rules_of(fs) == ["traced-branch"]
+
+    def test_plain_function_not_traced(self):
+        fs = findings_jit("""
+            def host_helper(x):
+                if x > 0:
+                    return x
+                return -x
+        """)
+        assert fs == []
+
+
+class TestHostSync:
+    def test_item_flagged(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                return x.sum().item()
+        """)
+        assert "host-sync" in rules_of(fs)
+
+    def test_float_cast_flagged(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                return float(x[0])
+        """)
+        assert "host-sync" in rules_of(fs)
+
+    def test_np_asarray_flagged(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                return np.asarray(x)
+        """)
+        assert "host-sync" in rules_of(fs)
+
+    def test_outside_trace_is_clean(self):
+        fs = findings_jit("""
+            def report(x):
+                return float(np.asarray(x).sum())
+        """)
+        assert fs == []
+
+    def test_float_of_shape_is_clean(self):
+        fs = findings_jit("""
+            @jax.jit
+            def f(x):
+                return x / float(x.shape[0])
+        """)
+        assert fs == []
+
+
+class TestMutableDefault:
+    def test_list_default_flagged(self):
+        fs = findings("""
+            def f(x, acc=[]):
+                acc.append(x)
+                return acc
+        """)
+        assert rules_of(fs) == ["mutable-default"]
+
+    def test_dict_and_call_defaults_flagged(self):
+        fs = findings("""
+            def f(x, cache={}, seen=set()):
+                return x
+        """)
+        assert rules_of(fs) == ["mutable-default", "mutable-default"]
+
+    def test_none_default_clean(self):
+        fs = findings("""
+            def f(x, acc=None, name="n", k=3):
+                return x
+        """)
+        assert fs == []
+
+
+class TestConfigReplaceGuard:
+    def test_unguarded_replace_flagged(self):
+        fs = findings_jit("""
+            import dataclasses
+            @jax.jit
+            def f(theta, cfg):
+                tcfg = dataclasses.replace(cfg, noise_rms_adc=theta[0])
+                return tcfg
+        """)
+        assert rules_of(fs) == ["config-replace-guard"]
+
+    def test_guarded_scope_is_clean(self):
+        fs = findings_jit("""
+            import dataclasses
+            @jax.jit
+            def f(theta, cfg):
+                val = theta[0]
+                if isinstance(val, jax.Array):
+                    val = val
+                tcfg = dataclasses.replace(cfg, noise_rms_adc=val)
+                return tcfg
+        """)
+        assert fs == []
+
+    def test_static_kwargs_clean(self):
+        fs = findings_jit("""
+            import dataclasses
+            @jax.jit
+            def f(x, cfg):
+                tcfg = dataclasses.replace(cfg, num_planes=3)
+                return tcfg
+        """)
+        assert fs == []
+
+
+class TestF64Literal:
+    def test_jnp_attribute_flagged(self):
+        fs = findings_jit("""
+            def f(x):
+                return x.astype(jnp.float64)
+        """)
+        assert "f64-literal" in rules_of(fs)
+
+    def test_dtype_kwarg_string_flagged(self):
+        fs = findings_jit("""
+            def f():
+                return jnp.zeros(3, dtype="float64")
+        """)
+        assert "f64-literal" in rules_of(fs)
+
+    def test_astype_string_flagged(self):
+        fs = findings_jit("""
+            def f(x):
+                return x.astype("float64")
+        """)
+        assert "f64-literal" in rules_of(fs)
+
+    def test_dtype_comparison_is_clean(self):
+        """The fft_conv idiom: checking a dtype is not creating one."""
+        fs = findings_jit("""
+            def f(x):
+                if x.dtype not in (jnp.float32, jnp.float64):
+                    x = x.astype(jnp.float32)
+                return x
+        """)
+        assert fs == []
+
+    def test_data_string_is_clean(self):
+        fs = findings("""
+            TOKENS = ("f32", "f64", "float64")
+            def f(c):
+                return "f64" in c
+        """)
+        assert fs == []
+
+
+class TestSuppressions:
+    def test_line_suppression(self):
+        fs = findings("""
+            def f(x, acc=[]):  # repro-lint: disable=mutable-default
+                return acc
+        """)
+        assert fs == []
+
+    def test_line_suppression_other_rule_still_fires(self):
+        fs = findings("""
+            def f(x, acc=[]):  # repro-lint: disable=key-reuse
+                return acc
+        """)
+        assert rules_of(fs) == ["mutable-default"]
+
+    def test_file_suppression(self):
+        fs = findings("""
+            # repro-lint: disable-file=mutable-default
+            def f(x, acc=[]):
+                return acc
+            def g(x, acc={}):
+                return acc
+        """)
+        assert fs == []
+
+
+class TestScopeDetection:
+    def test_jit_call_marks_name(self):
+        tree_src = textwrap.dedent("""
+            import jax
+            def body(x):
+                return x
+            run = jax.jit(body)
+        """)
+        import ast
+
+        assert "body" in traced_function_names(ast.parse(tree_src))
+
+    def test_lax_scan_marks_name(self):
+        import ast
+
+        tree_src = textwrap.dedent("""
+            import jax
+            def step(carry, x):
+                return carry, x
+            out = jax.lax.scan(step, 0, xs)
+        """)
+        assert "step" in traced_function_names(ast.parse(tree_src))
+
+    def test_graph_replace_marks_kwarg(self):
+        import ast
+
+        tree_src = textwrap.dedent("""
+            def noisy(state):
+                return state
+            graph = graph.replace(noise=noisy)
+        """)
+        assert "noisy" in traced_function_names(ast.parse(tree_src))
+
+
+class TestGate:
+    def test_rule_catalog_has_at_least_five_rules(self):
+        assert len(RULES) >= 5
+
+    def test_every_rule_name_is_kebab(self):
+        for name in RULES:
+            assert name == name.lower() and " " not in name
+
+    def test_repo_src_is_clean(self):
+        """The CI gate's contract: zero findings over src/."""
+        assert lint_paths(["src"]) == []
+
+    def test_parse_error_reported_not_raised(self):
+        fs = findings("def broken(:\n")
+        assert rules_of(fs) == ["parse-error"]
